@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+
+def time_us(fn: Callable, *args, repeat: int = 5, warmup: int = 1,
+            **kwargs) -> float:
+    for _ in range(warmup):
+        fn(*args, **kwargs)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn(*args, **kwargs)
+    return (time.perf_counter() - t0) / repeat * 1e6
+
+
+class Csv:
+    """Collects ``name,us_per_call,derived`` rows and prints them."""
+
+    def __init__(self):
+        self.rows: List[str] = []
+
+    def add(self, name: str, us_per_call: float, derived: str = ""):
+        row = f"{name},{us_per_call:.1f},{derived}"
+        self.rows.append(row)
+        print(row, flush=True)
+
+    def header(self):
+        print("name,us_per_call,derived", flush=True)

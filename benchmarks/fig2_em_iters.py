@@ -1,0 +1,40 @@
+"""Paper Fig. 2: total EM iterations in LDS vs (Δ, K, N, R) at p_s ∈
+{0.1, 0.2}. Exact reproduction (host-side estimator)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import assign_delays, lds_plan
+from benchmarks.table4_tpe import _pop
+from benchmarks.common import Csv
+
+
+def run(csv: Csv, quick: bool = False):
+    ks = [16, 64] if quick else [16, 32, 64, 128]
+    deltas = [0.0, 1.5] if quick else [0.0, 0.5, 1.0, 1.5]
+    n_rels = [1.0] if quick else [0.25, 1.0]   # N relative to D_0
+    for ps in ([0.1] if quick else [0.1, 0.2]):
+        for k in ks:
+            pop = _pop(k, seed=k + 100)
+            pop.delays[:] = assign_delays(k, ps, 100, 500, seed=k)
+            for reinit in (False, True):
+                for delta in deltas:
+                    for n_rel in n_rels:
+                        n = int(pop.total_size * n_rel)
+                        t0 = time.perf_counter()
+                        plan = lds_plan(pop, 128, delta=delta,
+                                        reinit=reinit, seed=1,
+                                        sample_size=n)
+                        us = (time.perf_counter() - t0) * 1e6
+                        csv.add(
+                            f"fig2_em_iters[ps={ps},K={k},R={int(reinit)},"
+                            f"delta={delta},N={n_rel}]", us,
+                            f"em_iters={plan.em_iterations}")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

@@ -1,0 +1,31 @@
+"""Paper Fig. 3: wall-clock epoch-plan sampling time, UGS vs LDS(Δ), vs K.
+LDS must stay only slightly slower than UGS (low overhead claim)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import assign_delays, lds_plan, ugs_plan
+from benchmarks.table4_tpe import _pop
+from benchmarks.common import Csv, time_us
+
+
+def run(csv: Csv, quick: bool = False):
+    ks = [16, 128] if quick else [16, 32, 64, 128, 256]
+    b = 128
+    for k in ks:
+        pop = _pop(k, seed=k + 7)
+        pop.delays[:] = assign_delays(k, 0.2, 100, 500, seed=k)
+        us_ugs = time_us(lambda: ugs_plan(pop, b, seed=0), repeat=3)
+        csv.add(f"fig3_sampling_time[ugs,K={k}]", us_ugs,
+                f"seconds={us_ugs/1e6:.3f}")
+        for delta in ([1.5] if quick else [0.5, 1.5]):
+            us_lds = time_us(lambda: lds_plan(pop, b, delta=delta, seed=0),
+                             repeat=3)
+            csv.add(f"fig3_sampling_time[lds{delta},K={k}]", us_lds,
+                    f"seconds={us_lds/1e6:.3f};overhead_x={us_lds/us_ugs:.2f}")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

@@ -1,0 +1,40 @@
+"""Paper Fig. 7: batch deviation of LDS vs UGS for Δ ∈ {0, 0.5, 1.0, 1.5}
+with stragglers present, IID and non-IID. Exact reproduction."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import assign_delays, lds_plan, simulate_plan_deviation, ugs_plan
+from benchmarks.fig6_deviation import _make_pop
+from benchmarks.common import Csv
+
+
+def run(csv: Csv, quick: bool = False):
+    deltas = [0.0, 1.5] if quick else [0.0, 0.5, 1.0, 1.5]
+    for iid in (True, False):
+        tag = "iid" if iid else "noniid"
+        for b, k in ([(128, 64)] if quick else [(128, 32), (128, 64),
+                                                (256, 64)]):
+            pop = _make_pop(k, 10, iid, seed=b * k + 1)
+            pop.delays[:] = assign_delays(k, 0.2, 100, 500, seed=7)
+            t0 = time.perf_counter()
+            parts = []
+            d = simulate_plan_deviation(ugs_plan(pop, b, seed=0), pop,
+                                        seed=0)
+            parts.append(f"ugs_mean={d.mean:.4f};ugs_std={d.std:.4f}")
+            for delta in deltas:
+                plan = lds_plan(pop, b, delta=delta, seed=0)
+                d = simulate_plan_deviation(plan, pop, seed=0)
+                parts.append(f"lds{delta}_mean={d.mean:.4f};"
+                             f"lds{delta}_std={d.std:.4f}")
+            us = (time.perf_counter() - t0) * 1e6
+            csv.add(f"fig7_deviation_lds[{tag},B={b},K={k}]", us,
+                    ";".join(parts))
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

@@ -1,0 +1,57 @@
+"""Substrate micro-benchmarks (ours, not a paper table): wall-clock of the
+pure-JAX perf-critical paths on this host + Pallas-vs-oracle agreement.
+Real kernel timing requires a TPU; interpret-mode numbers are correctness
+artifacts, so the timed entity here is the lowered jnp path the dry-run
+rooflines are derived from."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.transformer import chunked_xent
+from benchmarks.common import Csv, time_us
+
+
+def run(csv: Csv, quick: bool = False):
+    rng = np.random.default_rng(0)
+    b, s, hq, hk, d = 1, 1024, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hk, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hk, d)), jnp.float32)
+
+    f_skip = jax.jit(lambda q, k, v: L.blockwise_attention(
+        q, k, v, causal=True, q_chunk=256, kv_chunk=256, block_skip=True))
+    f_noskip = jax.jit(lambda q, k, v: L.blockwise_attention(
+        q, k, v, causal=True, q_chunk=256, kv_chunk=256, block_skip=False))
+    us1 = time_us(lambda: jax.block_until_ready(f_skip(q, k, v)), repeat=3)
+    us2 = time_us(lambda: jax.block_until_ready(f_noskip(q, k, v)), repeat=3)
+    flops = 4 * b * hq * s * s * d
+    csv.add("attention_blockwise[skip]", us1,
+            f"gflops_eff={flops/2/us1/1e3:.2f}")
+    csv.add("attention_blockwise[noskip]", us2,
+            f"gflops_eff={flops/us2/1e3:.2f};skip_speedup={us2/us1:.2f}x")
+
+    h = jnp.asarray(rng.normal(size=(4, 512, 128)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(128, 8192)), jnp.float32)
+    lab = jnp.asarray(rng.integers(0, 8192, (4, 512)), jnp.int32)
+    wt = jnp.ones((4, 512), jnp.float32)
+    fx = jax.jit(lambda h, w, lab, wt: chunked_xent(h, w, lab, wt)[0])
+    us3 = time_us(lambda: jax.block_until_ready(fx(h, w, lab, wt)), repeat=3)
+    csv.add("chunked_xent[4x512x8192]", us3, "")
+
+    # Pallas interpret-mode correctness deltas (deploy-path assurance)
+    from repro.kernels import ops, ref
+    out = ops.attention(q, k, v, causal=True, interpret=True)
+    want = jnp.swapaxes(ref.attention_ref(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+        jnp.swapaxes(v, 1, 2), causal=True), 1, 2)
+    csv.add("pallas_flash_attention[interpret]", 0.0,
+            f"max_err={float(jnp.abs(out - want).max()):.2e}")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c, quick=True)

@@ -1,0 +1,96 @@
+"""Roofline report: reads experiments/dryrun/*.json and emits the per
+(arch × shape × mesh) three-term table (deliverable g).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+                                               [--markdown out.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import List
+
+from benchmarks.common import Csv
+
+COLS = ("compute_s", "memory_s", "collective_s")
+
+
+def load_results(dir_: str) -> List[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def one_liner(r: dict) -> str:
+    if r["status"] != "ok":
+        return f"status={r['status']}"
+    roof = r["roofline"]
+    parts = [f"{c}={roof[c]:.4f}" for c in COLS]
+    parts.append(f"bottleneck={roof['bottleneck']}")
+    parts.append(f"useful_flop_ratio={r['useful_flop_ratio']:.3f}")
+    parts.append(f"peak_mem_gib={r['memory']['peak_bytes_est']/2**30:.2f}")
+    return ";".join(parts)
+
+
+def markdown_table(results: List[dict]) -> str:
+    lines = [
+        "| mesh | arch | shape | compute s | memory s | collective s | "
+        "bottleneck | MODEL/HLO flops | peak mem/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['mesh']} | {r['arch']} | {r['shape']} | — | "
+                         f"— | — | SKIPPED ({r['reason'][:40]}…) | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['mesh']} | {r['arch']} | {r['shape']} | "
+                         f"ERROR | | | | | |")
+            continue
+        if r.get("mode") == "scan":
+            lines.append(
+                f"| {r['mesh']} | {r['arch']} | {r['shape']} | — | — | — "
+                f"| compiles OK ({r['compile_s']}s; scanned lowering proof) "
+                f"| — | — |")
+            continue
+        roof = r["roofline"]
+        lines.append(
+            f"| {r['mesh']} | {r['arch']} | {r['shape']} "
+            f"| {roof['compute_s']:.4f} | {roof['memory_s']:.4f} "
+            f"| {roof['collective_s']:.4f} | **{roof['bottleneck']}** "
+            f"| {r['useful_flop_ratio']:.3f} "
+            f"| {r['memory']['peak_bytes_est']/2**30:.2f} GiB |")
+    return "\n".join(lines)
+
+
+def run(csv: Csv, quick: bool = False, dir_: str = "experiments/dryrun"):
+    results = load_results(dir_)
+    if not results:
+        csv.add("roofline[no-dryrun-data]", 0.0,
+                "run repro.launch.dryrun first")
+        return
+    for r in results:
+        name = f"roofline[{r.get('mesh','?')},{r['arch']},{r['shape']}]"
+        csv.add(name, float(r.get("compile_s", 0)) * 1e6, one_liner(r))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--markdown", default=None)
+    args = ap.parse_args()
+    results = load_results(args.dir)
+    md = markdown_table(results)
+    if args.markdown:
+        with open(args.markdown, "w") as f:
+            f.write(md + "\n")
+    print(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Paper Table II (+ Fig. 5): test accuracy of CL / PSL(UGS, LDS, FPLS, FLS)
+/ SL / FL / SFL under IID and non-IID splits.
+
+Scaled-down reproduction (documented in DESIGN.md): synthetic CIFAR-like
+data, GN-ResNet (reduced), K=8 clients, few epochs — the paper's qualitative
+claims (UGS/LDS ≈ CL everywhere; FPLS/FLS/FL/SFL collapse under non-IID)
+are the validation target, not the absolute numbers.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import optim
+from repro.configs import get_config
+from repro.core.partition import partition_dirichlet, partition_iid
+from repro.data.federated import ClientStore
+from repro.data.synthetic import make_classification_dataset
+from repro.frameworks import (train_cl, train_fl, train_psl, train_sfl,
+                              train_sl)
+from repro.models.cnn import CNNModel
+from benchmarks.common import Csv
+
+
+def run(csv: Csv, quick: bool = False):
+    n_train, n_test = (2500, 500) if quick else (4000, 800)
+    epochs = 6 if quick else 10
+    k = 8
+    img = 16
+    X, y = make_classification_dataset(n_train, image_size=img, seed=0)
+    Xt, yt = make_classification_dataset(n_test, image_size=img, seed=99)
+    model = CNNModel(get_config("paper-cnn", reduced=True))
+    mk_opt = lambda: optim.sgd(5e-2, momentum=0.9, weight_decay=5e-4)
+    b = 64
+
+    for iid in (True, False):
+        tag = "iid" if iid else "noniid"
+        part = partition_iid if iid else partition_dirichlet
+        parts, pop = part(y, k, 10, seed=1)
+        store = ClientStore.from_partition(X, y, parts, pop)
+
+        runs = {}
+        t0 = time.perf_counter()
+        runs["cl"] = train_cl(model, mk_opt(), X, y, (Xt, yt),
+                              epochs=epochs, batch_size=b, seed=0)
+        for method in ("ugs", "lds", "fpls", "fls"):
+            kw = {"sampler_kwargs": {"delta": 0.0}} if method == "lds" else {}
+            runs[f"psl_{method}"] = train_psl(
+                model, mk_opt(), store, (Xt, yt), epochs=epochs,
+                global_batch_size=b, method=method, seed=0, **kw)
+        runs["sl"] = train_sl(model, mk_opt(), store, (Xt, yt),
+                              epochs=epochs, batch_size=b // k, seed=0)
+        runs["fl"] = train_fl(model, mk_opt(), store, (Xt, yt),
+                              epochs=epochs, batch_size=b // k, seed=0)
+        runs["sfl"] = train_sfl(model, mk_opt(), store, (Xt, yt),
+                                epochs=epochs, batch_size=b // k, seed=0)
+        us = (time.perf_counter() - t0) * 1e6
+        derived = ";".join(f"{n}_best={h.best:.4f}" for n, h in runs.items())
+        csv.add(f"table2_accuracy[{tag},K={k}]", us, derived)
+        # Fig. 5 convergence dump (per-epoch accuracies)
+        for n, h in runs.items():
+            curve = "|".join(f"{a:.3f}" for a in h.test_acc)
+            csv.add(f"fig5_convergence[{tag},{n}]", 0.0, f"acc={curve}")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c, quick=True)

@@ -1,0 +1,59 @@
+"""Paper Table IV (+ Fig. 8): training time per epoch under stragglers, for
+K ∈ {16..128}, p_s ∈ {0.1, 0.2, 0.3}, Δ ∈ {0, 0.5, 1.0, 1.5}. Delay-model
+simulation over real epoch plans (the paper's delays are inputs, not
+measurements, so this reproduces the full grid)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ClientPopulation, assign_delays, lds_plan, simulate_tpe
+from benchmarks.common import Csv
+
+BASE_MS = 60.0
+
+
+def _pop(k: int, seed: int) -> ClientPopulation:
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(100, 500, size=k)
+    m = 10
+    counts = np.stack([rng.multinomial(s, np.ones(m) / m) for s in sizes])
+    return ClientPopulation(counts.sum(1), counts, np.zeros(k))
+
+
+def run(csv: Csv, quick: bool = False):
+    ks = [16, 128] if quick else [16, 32, 64, 128]
+    pss = [0.1, 0.3] if quick else [0.1, 0.2, 0.3]
+    deltas = [0.0, 1.5] if quick else [0.0, 0.5, 1.0, 1.5]
+    b = 128
+    for k in ks:
+        pop = _pop(k, seed=k)
+        # no-straggler baseline (p_s = 0, Δ = 0)
+        t0 = time.perf_counter()
+        plan0 = lds_plan(pop, b, delta=0.0, seed=0)
+        tpe0 = simulate_tpe(plan0.local_batch_sizes, pop.delays, BASE_MS)
+        csv.add(f"table4_tpe[K={k},ps=0.0,delta=0.0]",
+                (time.perf_counter() - t0) * 1e6,
+                f"tpe_s={tpe0.total_ms/1000:.2f}")
+        for ps in pss:
+            delays = assign_delays(k, ps, 100, 500, seed=k * 7 + int(ps * 10))
+            pop.delays[:] = delays
+            base = None
+            for delta in deltas:
+                t0 = time.perf_counter()
+                plan = lds_plan(pop, b, delta=delta, seed=0)
+                tpe = simulate_tpe(plan.local_batch_sizes, delays, BASE_MS)
+                us = (time.perf_counter() - t0) * 1e6
+                if delta == 0.0:
+                    base = tpe.total_ms
+                red = (1 - tpe.total_ms / base) * 100 if base else 0.0
+                csv.add(f"table4_tpe[K={k},ps={ps},delta={delta}]", us,
+                        f"tpe_s={tpe.total_ms/1000:.2f};reduction_pct={red:.1f};"
+                        f"em_iters={plan.em_iterations}")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

@@ -1,0 +1,91 @@
+"""Render dry-run JSONs into EXPERIMENTS.md placeholder sections.
+
+  PYTHONPATH=src python -m benchmarks.update_experiments
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+from benchmarks.roofline import load_results, markdown_table
+
+
+def _fill(text: str, marker: str, content: str) -> str:
+    tag = f"<!-- {marker} -->"
+    if tag not in text:
+        return text
+    return text.replace(tag, content)
+
+
+def summarize(results):
+    ok = [r for r in results if r["status"] == "ok"]
+    sk = [r for r in results if r["status"] == "skipped"]
+    er = [r for r in results if r["status"] == "error"]
+    singles = [r for r in ok if r["mesh"] == "single"]
+    multis = [r for r in ok if r["mesh"] == "multi"]
+    lines = [
+        f"- combos compiled OK: {len(ok)} "
+        f"(single-pod {len(singles)}, multi-pod {len(multis)}); "
+        f"documented skips: {len(sk)}; errors: {len(er)}.",
+    ]
+    if er:
+        for r in er:
+            lines.append(f"  - ERROR {r['mesh']}|{r['arch']}|{r['shape']}: "
+                         f"{r['error'][:160]}")
+    fb = sorted({f for r in ok for f in r.get("sharding_fallbacks", [])})
+    if fb:
+        lines.append(f"- sharding fallbacks observed: {'; '.join(fb)}")
+    return "\n".join(lines)
+
+
+def observations(results):
+    singles = [r for r in results
+               if r["status"] == "ok" and r["mesh"] == "single"
+               and r.get("mode") != "scan"]
+    if not singles:
+        return ""
+    by_bneck = {}
+    for r in singles:
+        by_bneck.setdefault(r["roofline"]["bottleneck"], []).append(
+            f"{r['arch']}×{r['shape']}")
+    lines = []
+    for b, items in sorted(by_bneck.items()):
+        lines.append(f"- **{b}-bound** ({len(items)}): {', '.join(items)}")
+    worst = min(
+        (r for r in singles if r["kind"] == "train"),
+        key=lambda r: r["roofline"]["compute_s"]
+        / max(r["roofline"]["step_time_s"], 1e-12), default=None)
+    if worst:
+        fr = worst["roofline"]["compute_s"] / worst["roofline"]["step_time_s"]
+        lines.append(f"- worst train roofline fraction: "
+                     f"{worst['arch']}×{worst['shape']} at "
+                     f"{fr*100:.1f}% of the dominant term")
+    most_coll = max(singles, key=lambda r: r["roofline"]["collective_s"]
+                    / max(r["roofline"]["step_time_s"], 1e-12))
+    lines.append(f"- most collective-bound: {most_coll['arch']}×"
+                 f"{most_coll['shape']} "
+                 f"(collective {most_coll['roofline']['collective_s']:.2f}s "
+                 f"of step {most_coll['roofline']['step_time_s']:.2f}s)")
+    return "\n".join(lines)
+
+
+def main():
+    results = load_results("experiments/dryrun")
+    singles = [r for r in results if r.get("mesh") == "single"]
+    multis = [r for r in results if r.get("mesh") == "multi"]
+    md = markdown_table(singles + multis)
+    with open("experiments/roofline.md", "w") as f:
+        f.write(md + "\n")
+    text = open("EXPERIMENTS.md").read()
+    text = _fill(text, "DRYRUN_SUMMARY", summarize(results))
+    text = _fill(text, "ROOFLINE_TABLE", markdown_table(
+        [r for r in singles if r.get("mode") != "scan"]))
+    text = _fill(text, "ROOFLINE_OBS", observations(results))
+    open("EXPERIMENTS.md", "w").write(text)
+    print("EXPERIMENTS.md updated;", len(results), "results")
+
+
+if __name__ == "__main__":
+    main()

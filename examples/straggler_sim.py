@@ -1,0 +1,53 @@
+"""Straggler mitigation with Latent Dirichlet Sampling (paper Sec. V-B).
+
+Injects stragglers (p_s of clients delayed 100–500 ms) into a K=64
+federation and sweeps the trade-off hyperparameter Δ, reporting simulated
+training time per epoch (TPE) and batch deviation — the Table IV / Fig. 7/8
+trade-off in one run.
+
+  PYTHONPATH=src python examples/straggler_sim.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import (ClientPopulation, assign_delays, lds_plan,
+                        simulate_plan_deviation, simulate_tpe, ugs_plan)
+
+
+def main():
+    k, b = 64, 128
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(100, 500, size=k)
+    counts = np.zeros((k, 10), np.int64)
+    for i in range(k):            # 2 classes per client → strong non-IID
+        cls = rng.choice(10, 2, replace=False)
+        s = rng.integers(0, sizes[i] + 1)
+        counts[i, cls[0]], counts[i, cls[1]] = s, sizes[i] - s
+    pop = ClientPopulation(counts.sum(1), counts, np.zeros(k))
+    pop.delays[:] = assign_delays(k, p_straggler=0.2, w_min=100, w_max=500,
+                                  seed=1)
+    n_strag = int((pop.delays > 0).sum())
+    print(f"K={k} clients, {n_strag} stragglers (100-500ms), B={b}\n")
+
+    plan_u = ugs_plan(pop, b, seed=0)
+    tpe_u = simulate_tpe(plan_u.local_batch_sizes, pop.delays)
+    dev_u = simulate_plan_deviation(plan_u, pop, seed=0)
+    print(f"{'method':>10} {'TPE (s)':>9} {'reduction':>10} "
+          f"{'deviation':>10} {'EM iters':>9}")
+    print(f"{'UGS':>10} {tpe_u.total_ms/1e3:>9.2f} {'—':>10} "
+          f"{dev_u.mean:>10.4f} {'—':>9}")
+    for delta in (0.0, 0.5, 1.0, 1.5):
+        plan = lds_plan(pop, b, delta=delta, seed=0)
+        tpe = simulate_tpe(plan.local_batch_sizes, pop.delays)
+        dev = simulate_plan_deviation(plan, pop, seed=0)
+        red = (1 - tpe.total_ms / tpe_u.total_ms) * 100
+        print(f"{'LDS Δ=' + str(delta):>10} {tpe.total_ms/1e3:>9.2f} "
+              f"{red:>9.1f}% {dev.mean:>10.4f} {plan.em_iterations:>9}")
+    print("\nHigher Δ ships stragglers' data early → they drop out of later "
+          "batches; TPE falls with a small deviation cost (paper Table IV).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Checkpointing: pytree ⇄ .npz with path-flattened keys.
+
+Sharding-aware: ``save`` gathers device arrays to host (process-local
+addressable shards are assembled by jax.device_get); ``restore`` returns
+numpy arrays that the caller re-shards via ``jax.device_put`` with the
+current mesh's NamedShardings (see repro.launch.train).
+"""
+from repro.checkpoint.io import restore, save, tree_equal
+
+__all__ = ["save", "restore", "tree_equal"]

@@ -1,0 +1,83 @@
+"""Flat-key npz checkpoint I/O for arbitrary pytrees (dicts/lists/leaves)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}{_SEP}"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}{_SEP}"))
+    else:
+        out[prefix.rstrip(_SEP)] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]) -> Any:
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def rebuild(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node)
+        if keys and all(k.startswith("#") for k in keys):
+            items = sorted(((int(k[1:]), v) for k, v in node.items()))
+            return [rebuild(v) for _, v in items]
+        return {k: rebuild(v) for k, v in node.items()}
+
+    return rebuild(root)
+
+
+def save(path: str, tree: Any) -> None:
+    flat = _flatten(jax.device_get(tree))
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    # bfloat16 has no numpy dtype in savez — view as uint16 with a marker
+    arrays, meta = {}, {}
+    for k, v in flat.items():
+        v = np.asarray(v)
+        if v.dtype == jax.numpy.bfloat16:
+            arrays[k] = v.view(np.uint16)
+            meta[k] = "bfloat16"
+        else:
+            arrays[k] = v
+    arrays["__bf16_keys__"] = np.array(sorted(meta), dtype=object)
+    np.savez(path, **arrays)
+
+
+def restore(path: str) -> Any:
+    data = np.load(path, allow_pickle=True)
+    bf16 = set(data["__bf16_keys__"].tolist())
+    flat = {}
+    for k in data.files:
+        if k == "__bf16_keys__":
+            continue
+        v = data[k]
+        if k in bf16:
+            v = v.view(jax.numpy.bfloat16)
+        flat[k] = v
+    return _unflatten(flat)
+
+
+def tree_equal(a: Any, b: Any) -> bool:
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    if ta != tb or len(la) != len(lb):
+        return False
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))

@@ -1,0 +1,25 @@
+"""Core library: the paper's contribution (global sampling for PSL).
+
+The SYSTEM layers live in sibling subpackages (models/, data/, optim/,
+frameworks/, launch/); this package holds the sampling orchestration —
+UGS, LDS, the EM-MAP estimator, deviation analytics, partitioning, and the
+straggler model — plus the PSL protocol itself (psl.py).
+"""
+from repro.core.types import ClientPopulation, EpochPlan
+from repro.core.sampling import (fls_plan, fpls_plan, lds_plan, make_plan,
+                                 ugs_plan)
+from repro.core.em import EMResult, em_map, em_map_jax, log_posterior
+from repro.core.deviation import (batch_deviation, lemma1_bound, lemma2_bound,
+                                  lemma2_terms, simulate_plan_deviation)
+from repro.core.partition import partition_dirichlet, partition_iid
+from repro.core.straggler import (adjust_concentration, assign_delays,
+                                  delay_zscores, simulate_tpe)
+
+__all__ = [
+    "ClientPopulation", "EpochPlan", "make_plan", "ugs_plan", "lds_plan",
+    "fpls_plan", "fls_plan", "EMResult", "em_map", "em_map_jax",
+    "log_posterior", "batch_deviation", "lemma1_bound", "lemma2_bound",
+    "lemma2_terms", "simulate_plan_deviation", "partition_dirichlet",
+    "partition_iid", "adjust_concentration", "assign_delays",
+    "delay_zscores", "simulate_tpe",
+]

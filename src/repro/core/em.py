@@ -1,0 +1,157 @@
+"""EM algorithm for MAP estimation of client selection probabilities (LDS).
+
+Implements Algorithm 2 of the paper with the class-wise responsibility
+reformulation (Eq. 5): responsibilities are computed per *class* rather than
+per sample, giving O(K*M) per iteration instead of O(N*K).
+
+Two implementations are provided:
+  * ``em_map`` — numpy, used by the host-side epoch planner (this is where the
+    algorithm runs in a real deployment: on the PSL server's CPU).
+  * ``em_map_jax`` — vectorized JAX (``lax.while_loop``), usable on-device and
+    differentiable-free; validated against the numpy version in tests.
+
+M-step (Proposition 1):  pi_k = (N_k + alpha_k - 1) / (N + alpha_0 - K)
+with N_k = nu^T gamma_hat_k.
+
+Note on alpha < 1: the closed-form M-step can produce negative components when
+some alpha_k < 1 (the Dirichlet MAP sits on the simplex boundary). The paper's
+initialization (alpha_k = D_k/D * N) keeps alpha_k >= 1 for non-empty clients,
+but the exponential delay adjustment can push small clients below 1. We follow
+standard practice and clamp to a tiny floor before renormalizing; this is
+documented in DESIGN.md and exercised in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+_EPS = 1e-12
+_PI_FLOOR = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class EMResult:
+    pi: np.ndarray
+    iterations: int
+    converged: bool
+
+
+def _m_step_np(n_k: np.ndarray, alpha: np.ndarray, n_total: float,
+               active: np.ndarray) -> np.ndarray:
+    k_active = int(active.sum())
+    alpha0 = float(alpha[active].sum())
+    denom = n_total + alpha0 - k_active
+    pi = np.where(active, (n_k + alpha - 1.0) / max(denom, _EPS), 0.0)
+    pi = np.maximum(pi, np.where(active, _PI_FLOOR, 0.0))
+    return pi / max(pi.sum(), _EPS)
+
+
+def em_map(nu: np.ndarray, pi_init: np.ndarray, beta: np.ndarray,
+           alpha: np.ndarray, tau: float = 1e-5, max_iters: int = 10_000,
+           active: Optional[np.ndarray] = None) -> EMResult:
+    """MAP-EM for the mixture proportions pi (Algorithm 2, class-wise form).
+
+    Args:
+      nu:    (M,) class counts of the observed label vector y.
+      pi_init: (K,) initial mixture proportions (on the simplex over `active`).
+      beta:  (K, M) per-client class distributions.
+      alpha: (K,) Dirichlet concentration parameters.
+      tau:   convergence threshold on ||pi_new - pi_old||_2.
+      active: (K,) bool mask of alive mixture components (non-depleted
+        clients). Inactive components are held at exactly 0.
+    """
+    nu = np.asarray(nu, dtype=np.float64)
+    beta = np.asarray(beta, dtype=np.float64)
+    alpha = np.asarray(alpha, dtype=np.float64)
+    k = pi_init.shape[0]
+    if active is None:
+        active = np.ones(k, dtype=bool)
+    pi_new = np.where(active, pi_init, 0.0)
+    pi_new = pi_new / max(pi_new.sum(), _EPS)
+    n_total = float(nu.sum())
+
+    iters = 0
+    converged = False
+    while iters < max_iters:
+        pi_old = pi_new
+        # E-step: class-wise responsibilities gamma_hat (K, M), Eq. (5).
+        w = pi_old[:, None] * beta                      # (K, M)
+        denom = np.maximum(w.sum(axis=0, keepdims=True), _EPS)
+        gamma_hat = w / denom
+        n_k = gamma_hat @ nu                            # (K,)
+        # M-step: Proposition 1.
+        pi_new = _m_step_np(n_k, alpha, n_total, active)
+        iters += 1
+        if np.linalg.norm(pi_new - pi_old) < tau:
+            converged = True
+            break
+    return EMResult(pi=pi_new, iterations=iters, converged=converged)
+
+
+def log_posterior(pi: np.ndarray, nu: np.ndarray, beta: np.ndarray,
+                  alpha: np.ndarray, active: Optional[np.ndarray] = None
+                  ) -> float:
+    """ln P(y | pi, beta) + ln P(pi | alpha) up to the Beta-function constant.
+
+    Used by tests to assert EM monotonically increases the posterior.
+    """
+    if active is None:
+        active = np.ones(pi.shape[0], dtype=bool)
+    mix = np.maximum((pi[active, None] * beta[active]).sum(axis=0), _EPS)
+    loglik = float((nu * np.log(mix)).sum())
+    pa = np.maximum(pi[active], _EPS)
+    logprior = float(((alpha[active] - 1.0) * np.log(pa)).sum())
+    return loglik + logprior
+
+
+# ---------------------------------------------------------------------------
+# JAX implementation (vectorized, lax.while_loop)
+# ---------------------------------------------------------------------------
+
+def em_map_jax(nu, pi_init, beta, alpha, tau: float = 1e-5,
+               max_iters: int = 10_000, active=None) -> Tuple:
+    """JAX twin of :func:`em_map`. Returns (pi, iterations, converged).
+
+    Shapes are static; the while loop carries (pi, iter, delta). Suitable for
+    jit and for running the estimator on-device next to the training step.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    nu = jnp.asarray(nu, jnp.float32)
+    beta = jnp.asarray(beta, jnp.float32)
+    alpha = jnp.asarray(alpha, jnp.float32)
+    pi0 = jnp.asarray(pi_init, jnp.float32)
+    k = pi0.shape[0]
+    if active is None:
+        active = jnp.ones((k,), bool)
+    else:
+        active = jnp.asarray(active, bool)
+
+    pi0 = jnp.where(active, pi0, 0.0)
+    pi0 = pi0 / jnp.maximum(pi0.sum(), _EPS)
+    n_total = nu.sum()
+    k_active = active.sum().astype(jnp.float32)
+    alpha0 = jnp.where(active, alpha, 0.0).sum()
+    denom_m = jnp.maximum(n_total + alpha0 - k_active, _EPS)
+
+    def body(carry):
+        pi_old, it, _ = carry
+        w = pi_old[:, None] * beta
+        gamma_hat = w / jnp.maximum(w.sum(axis=0, keepdims=True), _EPS)
+        n_k = gamma_hat @ nu
+        pi = jnp.where(active, (n_k + alpha - 1.0) / denom_m, 0.0)
+        pi = jnp.maximum(pi, jnp.where(active, _PI_FLOOR, 0.0))
+        pi = pi / jnp.maximum(pi.sum(), _EPS)
+        delta = jnp.linalg.norm(pi - pi_old)
+        return pi, it + 1, delta
+
+    def cond(carry):
+        _, it, delta = carry
+        return jnp.logical_and(it < max_iters, delta >= tau)
+
+    pi, iters, delta = jax.lax.while_loop(
+        cond, body, (pi0, jnp.int32(0), jnp.float32(jnp.inf)))
+    return pi, iters, delta < tau

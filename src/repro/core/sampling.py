@@ -1,0 +1,275 @@
+"""Global sampling methods for Parallel Split Learning.
+
+This module is the paper's primary contribution: server-side orchestration of
+the mini-batch composition. Every sampler consumes a :class:`ClientPopulation`
+and emits an :class:`EpochPlan` — the (T, K) matrix of local batch sizes
+B_k^(t) that the server ships to the clients before the epoch starts.
+
+Samplers:
+  * ``fls_plan``  — Fixed Local Sampling: identical fixed B_k (baseline, [24]).
+  * ``fpls_plan`` — Fixed Proportional Local Sampling: B_k ∝ D_k (baseline,
+    the default PSL scheme of Jeon & Kim [19]).
+  * ``ugs_plan``  — Uniform Global Sampling (Algorithm 1).
+  * ``lds_plan``  — Latent Dirichlet Sampling (Algorithm 3); Δ=0 reduces to
+    UGS up to EM convergence noise.
+
+Implementation note (TPU/vectorization): Algorithm 1 draws the B slot→client
+assignments one categorical sample at a time, renormalizing π when a client's
+dataset depletes mid-step. We draw in *chunks* (one multinomial draw for all
+still-unassigned slots), cap each client at its remaining budget, and redraw
+the overflow under the renormalized π. Because only the per-step *counts*
+enter the plan and draws are exchangeable within a step, the chunked process
+induces the same count distribution as the sequential one; a statistical test
+(tests/test_sampling.py) compares both against an exact sequential reference.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import em as em_lib
+from repro.core import straggler as straggler_lib
+from repro.core.types import ClientPopulation, EpochPlan
+
+_EPS = 1e-12
+
+
+def _num_steps(total: int, batch: int) -> int:
+    return int(np.ceil(total / batch))
+
+
+# ---------------------------------------------------------------------------
+# Fixed baselines
+# ---------------------------------------------------------------------------
+
+def _fixed_plan(pop: ClientPopulation, per_client: np.ndarray,
+                method: str, global_batch_size: int) -> EpochPlan:
+    """Roll a fixed per-step allocation until all datasets deplete."""
+    remaining = pop.dataset_sizes.copy()
+    rows = []
+    while remaining.sum() > 0:
+        take = np.minimum(per_client, remaining)
+        rows.append(take)
+        remaining = remaining - take
+    plan = np.stack(rows).astype(np.int64)
+    return EpochPlan(local_batch_sizes=plan,
+                     global_batch_size=global_batch_size, method=method)
+
+
+def fls_plan(pop: ClientPopulation, global_batch_size: int) -> EpochPlan:
+    """Fixed Local Sampling: identical local batch size for every client.
+
+    B' = round(B / K), floored at 1 (paper Sec. V-A rounding rule). The
+    *effective* batch size is K * B', i.e. coupled to the client count — the
+    failure mode UGS removes.
+    """
+    k = pop.num_clients
+    per = max(1, int(round(global_batch_size / k)))
+    per_client = np.full(k, per, dtype=np.int64)
+    return _fixed_plan(pop, per_client, "fls", global_batch_size)
+
+
+def fpls_plan(pop: ClientPopulation, global_batch_size: int) -> EpochPlan:
+    """Fixed Proportional Local Sampling: B_k = round(B * D_k / D), min 1."""
+    d = pop.dataset_sizes.astype(np.float64)
+    raw = global_batch_size * d / max(d.sum(), 1.0)
+    per_client = np.maximum(1, np.round(raw)).astype(np.int64)
+    return _fixed_plan(pop, per_client, "fpls", global_batch_size)
+
+
+# ---------------------------------------------------------------------------
+# Uniform Global Sampling (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def _draw_step_counts(rng: np.random.Generator, budget: int,
+                      pi: np.ndarray, remaining: np.ndarray
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Draw `budget` slot→client assignments under depletion-aware π.
+
+    Returns (counts for this step, updated π). `remaining` is *not* mutated.
+    """
+    k = pi.shape[0]
+    counts = np.zeros(k, dtype=np.int64)
+    rem = remaining.copy()
+    need = int(budget)
+    pi = pi.copy()
+    while need > 0:
+        chunk = rng.multinomial(need, pi)
+        take = np.minimum(chunk, rem)
+        counts += take
+        rem -= take
+        need -= int(take.sum())
+        depleted = (rem == 0) & (pi > 0)
+        if depleted.any():
+            pi = np.where(rem > 0, pi, 0.0)
+            total = pi.sum()
+            if total <= _EPS:
+                break
+            pi = pi / total
+    return counts, pi
+
+
+def ugs_plan(pop: ClientPopulation, global_batch_size: int,
+             seed: int = 0,
+             sequential: bool = False) -> EpochPlan:
+    """Uniform Global Sampling (Algorithm 1).
+
+    π_k = D_k / D; each of T=⌈D/B⌉ steps assigns B slots to clients via
+    Categorical(π), zeroing and renormalizing π on depletion. Every client's
+    dataset is fully consumed over the epoch and each non-final global batch
+    has exactly B samples — the effective batch size no longer depends on K.
+    """
+    rng = np.random.default_rng(seed)
+    d = pop.dataset_sizes.astype(np.float64)
+    total = int(d.sum())
+    b = int(global_batch_size)
+    t_steps = _num_steps(total, b)
+    plan = np.zeros((t_steps, pop.num_clients), dtype=np.int64)
+
+    remaining = pop.dataset_sizes.copy()
+    pi = d / max(d.sum(), _EPS)
+    for t in range(t_steps):
+        budget = min(b, int(remaining.sum()))
+        if sequential:
+            counts, pi = _draw_step_counts_sequential(rng, budget, pi,
+                                                      remaining)
+        else:
+            counts, pi = _draw_step_counts(rng, budget, pi, remaining)
+        plan[t] = counts
+        remaining -= counts
+    return EpochPlan(local_batch_sizes=plan, global_batch_size=b,
+                     method="ugs")
+
+
+def _draw_step_counts_sequential(rng: np.random.Generator, budget: int,
+                                 pi: np.ndarray, remaining: np.ndarray
+                                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Literal per-draw transcription of Algorithm 1 (reference/tests)."""
+    k = pi.shape[0]
+    counts = np.zeros(k, dtype=np.int64)
+    rem = remaining.copy()
+    pi = pi.copy()
+    for _ in range(int(budget)):
+        z = rng.choice(k, p=pi)
+        counts[z] += 1
+        rem[z] -= 1
+        if rem[z] == 0:
+            pi[z] = 0.0
+            total = pi.sum()
+            if total <= _EPS:
+                break
+            pi = pi / total
+    return counts, pi
+
+
+# ---------------------------------------------------------------------------
+# Latent Dirichlet Sampling (Algorithm 3)
+# ---------------------------------------------------------------------------
+
+def initialize_concentration(pop: ClientPopulation, delta: float,
+                             sample_size: Optional[int] = None) -> np.ndarray:
+    """Two-stage α initialization (Sec. IV-D).
+
+    α_k = (D_k / D) · N, then α_k *= exp(Δ · zscore(ω_k)). With N = D the
+    first stage gives α_k = D_k, keeping α commensurate with the N_k of the
+    M-step (neither dominant nor negligible).
+    """
+    n = pop.total_size if sample_size is None else int(sample_size)
+    alpha = pop.dataset_sizes.astype(np.float64) / max(pop.total_size, 1) * n
+    return straggler_lib.adjust_concentration(alpha, pop.delays, delta)
+
+
+def lds_plan(pop: ClientPopulation, global_batch_size: int,
+             delta: float = 0.0, tau: float = 1e-5,
+             reinit: bool = False, seed: int = 0,
+             sample_size: Optional[int] = None,
+             max_em_iters: int = 10_000) -> EpochPlan:
+    """Latent Dirichlet Sampling (Algorithm 3).
+
+    π is the MAP estimate of the mixture proportions under a Dir(α) prior,
+    fitted by EM to the overall class counts ν (the paper always uses the
+    complete label vector y = y_0; `sample_size` only rescales α's first
+    stage when a sub-sample is modelled). On client depletion the component
+    is removed and EM re-estimates π — warm-started from the running π when
+    ``reinit=False`` (R=0), or re-drawn from the prior when ``reinit=True``
+    (R=1).
+    """
+    rng = np.random.default_rng(seed)
+    k = pop.num_clients
+    b = int(global_batch_size)
+    total = pop.total_size
+    t_steps = _num_steps(total, b)
+
+    beta = pop.class_distributions                      # (K, M)
+    nu = pop.class_counts.sum(axis=0).astype(np.float64)  # (M,) counts of y_0
+    if sample_size is not None:
+        nu = nu / max(nu.sum(), 1.0) * float(sample_size)
+    alpha = initialize_concentration(pop, delta, sample_size=sample_size)
+    active = pop.dataset_sizes > 0
+
+    def _draw_prior(active_mask: np.ndarray) -> np.ndarray:
+        a = np.where(active_mask, np.maximum(alpha, _EPS), _EPS)
+        pi = rng.dirichlet(a)
+        pi = np.where(active_mask, pi, 0.0)
+        return pi / max(pi.sum(), _EPS)
+
+    em_total = 0
+    pi = _draw_prior(active)
+    res = em_lib.em_map(nu, pi, beta, alpha, tau=tau, max_iters=max_em_iters,
+                        active=active)
+    pi = res.pi
+    em_total += res.iterations
+    pi_history = [pi.copy()]
+
+    plan = np.zeros((t_steps, k), dtype=np.int64)
+    remaining = pop.dataset_sizes.copy()
+    for t in range(t_steps):
+        budget = min(b, int(remaining.sum()))
+        counts = np.zeros(k, dtype=np.int64)
+        need = budget
+        while need > 0:
+            chunk = rng.multinomial(need, pi)
+            take = np.minimum(chunk, remaining - counts)
+            counts += take
+            need -= int(take.sum())
+            newly_depleted = ((remaining - counts) == 0) & active
+            if newly_depleted.any():
+                # RemoveComponent: drop depleted clients, re-estimate π.
+                active = active & ~newly_depleted
+                if not active.any():
+                    break
+                if reinit:
+                    pi = _draw_prior(active)
+                else:
+                    pi = np.where(active, pi, 0.0)
+                    pi = pi / max(pi.sum(), _EPS)
+                res = em_lib.em_map(nu, pi, beta, alpha, tau=tau,
+                                    max_iters=max_em_iters, active=active)
+                pi = res.pi
+                em_total += res.iterations
+                pi_history.append(pi.copy())
+        plan[t] = counts
+        remaining -= counts
+    return EpochPlan(local_batch_sizes=plan, global_batch_size=b,
+                     method=f"lds(delta={delta},R={int(reinit)})",
+                     em_iterations=em_total, pi_history=pi_history)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def make_plan(method: str, pop: ClientPopulation, global_batch_size: int,
+              seed: int = 0, **kwargs) -> EpochPlan:
+    """Uniform entry point used by the data pipeline / trainer."""
+    method = method.lower()
+    if method == "ugs":
+        return ugs_plan(pop, global_batch_size, seed=seed)
+    if method == "lds":
+        return lds_plan(pop, global_batch_size, seed=seed, **kwargs)
+    if method == "fpls":
+        return fpls_plan(pop, global_batch_size)
+    if method == "fls":
+        return fls_plan(pop, global_batch_size)
+    raise ValueError(f"unknown sampling method: {method!r}")

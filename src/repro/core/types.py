@@ -1,0 +1,113 @@
+"""Shared core types for the PSL global-sampling framework."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientPopulation:
+    """Static description of a federation of K clients.
+
+    Attributes:
+      dataset_sizes: (K,) int array, D_k.
+      class_counts:  (K, M) int array, per-client class histogram.
+      delays:        (K,) float array, straggler delay times omega_k (ms),
+                     relative to the fastest client (min is 0).
+    """
+
+    dataset_sizes: np.ndarray
+    class_counts: np.ndarray
+    delays: np.ndarray
+
+    def __post_init__(self):
+        object.__setattr__(self, "dataset_sizes",
+                           np.asarray(self.dataset_sizes, dtype=np.int64))
+        object.__setattr__(self, "class_counts",
+                           np.asarray(self.class_counts, dtype=np.int64))
+        object.__setattr__(self, "delays",
+                           np.asarray(self.delays, dtype=np.float64))
+        if self.class_counts.ndim != 2:
+            raise ValueError("class_counts must be (K, M)")
+        if self.dataset_sizes.shape[0] != self.class_counts.shape[0]:
+            raise ValueError("K mismatch between dataset_sizes and class_counts")
+        if not np.all(self.class_counts.sum(axis=1) == self.dataset_sizes):
+            raise ValueError("class_counts rows must sum to dataset_sizes")
+
+    @property
+    def num_clients(self) -> int:
+        return int(self.dataset_sizes.shape[0])
+
+    @property
+    def num_classes(self) -> int:
+        return int(self.class_counts.shape[1])
+
+    @property
+    def total_size(self) -> int:
+        return int(self.dataset_sizes.sum())
+
+    @property
+    def class_distributions(self) -> np.ndarray:
+        """beta_k, shape (K, M). Rows of all-zero datasets are uniform."""
+        d = self.dataset_sizes.astype(np.float64)[:, None]
+        with np.errstate(divide="ignore", invalid="ignore"):
+            beta = np.where(d > 0, self.class_counts / np.maximum(d, 1), 0.0)
+        return beta
+
+    @property
+    def overall_distribution(self) -> np.ndarray:
+        """beta_0, shape (M,)."""
+        tot = self.class_counts.sum(axis=0).astype(np.float64)
+        return tot / max(tot.sum(), 1.0)
+
+    @classmethod
+    def homogeneous(cls, num_clients: int, per_client: int, num_classes: int,
+                    seed: int = 0) -> "ClientPopulation":
+        rng = np.random.default_rng(seed)
+        counts = rng.multinomial(per_client,
+                                 np.full(num_classes, 1.0 / num_classes),
+                                 size=num_clients)
+        return cls(dataset_sizes=counts.sum(axis=1), class_counts=counts,
+                   delays=np.zeros(num_clients))
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochPlan:
+    """Output of a global sampling method for one epoch.
+
+    Attributes:
+      local_batch_sizes: (T, K) int array; B_k^(t). Rows sum to <= B
+        (== B except possibly the final ragged step).
+      global_batch_size: B.
+      method: sampler name that produced the plan.
+      em_iterations: total EM iterations spent (LDS only; 0 otherwise).
+      pi_history: list of pi vectors used across the epoch (diagnostics).
+    """
+
+    local_batch_sizes: np.ndarray
+    global_batch_size: int
+    method: str
+    em_iterations: int = 0
+    pi_history: Optional[list] = None
+
+    @property
+    def num_steps(self) -> int:
+        return int(self.local_batch_sizes.shape[0])
+
+    @property
+    def num_clients(self) -> int:
+        return int(self.local_batch_sizes.shape[1])
+
+    def validate_against(self, pop: ClientPopulation) -> None:
+        b = self.local_batch_sizes
+        if np.any(b < 0):
+            raise AssertionError("negative local batch size")
+        if not np.all(b.sum(axis=0) == pop.dataset_sizes):
+            raise AssertionError("plan does not deplete every client dataset")
+        sums = b.sum(axis=1)
+        if not np.all(sums[:-1] == self.global_batch_size):
+            raise AssertionError("non-final steps must sum to B")
+        if not (0 < sums[-1] <= self.global_batch_size):
+            raise AssertionError("final step must be non-empty and <= B")

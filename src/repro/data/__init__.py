@@ -1,0 +1,7 @@
+"""Data pipeline: synthetic datasets, federated client stores, batch builder."""
+from repro.data.synthetic import (make_classification_dataset,
+                                  make_lm_dataset)
+from repro.data.federated import ClientStore, GlobalBatchIterator
+
+__all__ = ["make_classification_dataset", "make_lm_dataset", "ClientStore",
+           "GlobalBatchIterator"]

@@ -1,0 +1,85 @@
+"""Federated client stores and the plan-driven global-batch iterator.
+
+The server never touches client features; it only knows dataset sizes and
+class counts (the paper's availability assumption). The iterator materializes
+the global batches of an :class:`EpochPlan`: for step t it asks each client
+with B_k^t > 0 for that many locally-uniform-without-replacement samples and
+fills the static (B, ...) buffer together with client-id tags and the
+slot-weight vector implementing the chosen gradient aggregation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.core.psl import slot_weights
+from repro.core.types import ClientPopulation, EpochPlan
+
+
+@dataclasses.dataclass
+class ClientStore:
+    """Per-client data shards + sampling state."""
+    features: List[np.ndarray]          # K arrays (D_k, ...)
+    labels: List[np.ndarray]            # K arrays (D_k,)
+    population: ClientPopulation
+
+    @classmethod
+    def from_partition(cls, features: np.ndarray, labels: np.ndarray,
+                       parts: List[np.ndarray], population: ClientPopulation
+                       ) -> "ClientStore":
+        return cls(features=[features[p] for p in parts],
+                   labels=[labels[p] for p in parts],
+                   population=population)
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.features)
+
+
+class GlobalBatchIterator:
+    """Iterates the global batches of one epoch plan."""
+
+    def __init__(self, store: ClientStore, plan: EpochPlan,
+                 aggregation: str = "global_mean", seed: int = 0,
+                 pad_to: Optional[int] = None):
+        self.store = store
+        self.plan = plan
+        self.aggregation = aggregation
+        self.pad_to = pad_to or plan.global_batch_size
+        rng = np.random.default_rng(seed)
+        # per-client random visit order = uniform sampling w/o replacement
+        self._order = [rng.permutation(len(f)) for f in store.features]
+        self._cursor = np.zeros(store.num_clients, dtype=np.int64)
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        feat0 = self.store.features[0]
+        for t in range(self.plan.num_steps):
+            sizes = self.plan.local_batch_sizes[t]
+            picks_f, picks_l, ids = [], [], []
+            for k in range(self.store.num_clients):
+                n = int(sizes[k])
+                if n == 0:
+                    continue
+                idx = self._order[k][self._cursor[k]:self._cursor[k] + n]
+                self._cursor[k] += n
+                picks_f.append(self.store.features[k][idx])
+                picks_l.append(self.store.labels[k][idx])
+                ids.append(np.full(n, k, dtype=np.int64))
+            feats = np.concatenate(picks_f)
+            labs = np.concatenate(picks_l)
+            cids = np.concatenate(ids)
+            b = self.pad_to
+            if feats.shape[0] < b:     # final ragged step → pad + mask
+                pad = b - feats.shape[0]
+                feats = np.concatenate(
+                    [feats, np.zeros((pad,) + feats.shape[1:],
+                                     feats.dtype)])
+                labs = np.concatenate([labs, np.zeros(pad, labs.dtype)])
+                cids = np.concatenate([cids, np.full(pad, -1)])
+            w = slot_weights(cids, sizes,
+                             self.store.population.dataset_sizes,
+                             self.aggregation)
+            yield {"features": feats, "labels": labs.astype(np.int64),
+                   "client_ids": cids, "weights": w, "step": t}

@@ -1,0 +1,226 @@
+"""Reference implementations of the compared DDL frameworks (paper Sec. V).
+
+All trainers share the CNN/LM model API (loss_fn(params, batch), client/server
+split) and a ClientStore. They are deliberately faithful to the protocols:
+
+  * CL   — central learning on the pooled dataset (upper baseline).
+  * SL   — sequential split learning: one client at a time trains with the
+           server; client weights hop to the next client.
+  * FL   — FedAvg: local epochs on full model copies; size-weighted average.
+  * SFL  — SplitFed: clients train client-segments in parallel against a
+           shared server segment; client segments are FedAvg'd every round.
+  * PSL  — parallel split learning, batch composition from an EpochPlan
+           (UGS / LDS / FPLS / FLS via repro.core.sampling).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sampling as sampling_lib
+from repro.core.types import ClientPopulation
+from repro.data.federated import ClientStore, GlobalBatchIterator
+from repro.optim import TrainState, apply_updates
+from repro.core.psl import make_train_step
+
+
+def _batch_from(features, labels, weights=None):
+    b = {"labels": jnp.asarray(labels, jnp.int32),
+         "weights": jnp.asarray(
+             np.ones(len(labels), np.float32) if weights is None
+             else weights)}
+    b["images"] = jnp.asarray(features)
+    return b
+
+
+def evaluate(model, params, features: np.ndarray, labels: np.ndarray,
+             batch_size: int = 512) -> float:
+    correct = 0
+    predict = jax.jit(model.predict)
+    for i in range(0, len(features), batch_size):
+        logits = predict(params, jnp.asarray(features[i:i + batch_size]))
+        correct += int((np.asarray(logits).argmax(-1)
+                        == labels[i:i + batch_size]).sum())
+    return correct / len(features)
+
+
+@dataclasses.dataclass
+class History:
+    test_acc: List[float]
+    extras: Dict[str, Any]
+
+    @property
+    def best(self) -> float:
+        return max(self.test_acc) if self.test_acc else 0.0
+
+
+def _epoch_eval(model, state, test, hist):
+    acc = evaluate(model, state.params, *test)
+    hist.append(acc)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Central learning
+# ---------------------------------------------------------------------------
+
+def train_cl(model, optimizer, features, labels, test, *, epochs: int,
+             batch_size: int, seed: int = 0) -> History:
+    step = jax.jit(make_train_step(model, optimizer))
+    params = model.init(jax.random.PRNGKey(seed))
+    state = TrainState(params, optimizer.init(params),
+                       jnp.zeros((), jnp.int32))
+    rng = np.random.default_rng(seed)
+    hist: List[float] = []
+    n = len(features)
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            idx = order[i:i + batch_size]
+            state, _ = step(state, _batch_from(features[idx], labels[idx]))
+        _epoch_eval(model, state, test, hist)
+    return History(hist, {})
+
+
+# ---------------------------------------------------------------------------
+# Parallel Split Learning (the paper's framework + our samplers)
+# ---------------------------------------------------------------------------
+
+def train_psl(model, optimizer, store: ClientStore, test, *, epochs: int,
+              global_batch_size: int, method: str = "ugs",
+              aggregation: str = "global_mean", seed: int = 0,
+              sampler_kwargs: Optional[dict] = None,
+              track_tpe: bool = False, base_step_ms: float = 60.0
+              ) -> History:
+    from repro.core.straggler import simulate_tpe
+    step = jax.jit(make_train_step(model, optimizer))
+    params = model.init(jax.random.PRNGKey(seed))
+    state = TrainState(params, optimizer.init(params),
+                       jnp.zeros((), jnp.int32))
+    hist: List[float] = []
+    tpes: List[float] = []
+    em_iters = 0
+    for e in range(epochs):
+        plan = sampling_lib.make_plan(method, store.population,
+                                      global_batch_size, seed=seed + e,
+                                      **(sampler_kwargs or {}))
+        em_iters += plan.em_iterations
+        if track_tpe:
+            tpes.append(simulate_tpe(plan.local_batch_sizes,
+                                     store.population.delays,
+                                     base_step_ms=base_step_ms).total_ms)
+        for gb in GlobalBatchIterator(store, plan, aggregation,
+                                      seed=seed * 1000 + e):
+            state, _ = step(state, _batch_from(gb["features"], gb["labels"],
+                                               gb["weights"]))
+        _epoch_eval(model, state, test, hist)
+    return History(hist, {"tpe_ms": tpes, "em_iterations": em_iters})
+
+
+# ---------------------------------------------------------------------------
+# Sequential Split Learning
+# ---------------------------------------------------------------------------
+
+def train_sl(model, optimizer, store: ClientStore, test, *, epochs: int,
+             batch_size: int, seed: int = 0) -> History:
+    step = jax.jit(make_train_step(model, optimizer))
+    params = model.init(jax.random.PRNGKey(seed))
+    state = TrainState(params, optimizer.init(params),
+                       jnp.zeros((), jnp.int32))
+    rng = np.random.default_rng(seed)
+    hist: List[float] = []
+    for _ in range(epochs):
+        for k in rng.permutation(store.num_clients):
+            feats, labs = store.features[k], store.labels[k]
+            order = rng.permutation(len(feats))
+            bs = min(batch_size, len(feats))
+            for i in range(0, len(feats) - bs + 1, bs):
+                idx = order[i:i + bs]
+                state, _ = step(state, _batch_from(feats[idx], labs[idx]))
+        _epoch_eval(model, state, test, hist)
+    return History(hist, {})
+
+
+# ---------------------------------------------------------------------------
+# Federated learning (FedAvg)
+# ---------------------------------------------------------------------------
+
+def _tree_weighted_sum(trees, weights):
+    return jax.tree_util.tree_map(
+        lambda *xs: sum(w * x.astype(jnp.float32) for w, x in
+                        zip(weights, xs)).astype(xs[0].dtype), *trees)
+
+
+def train_fl(model, optimizer, store: ClientStore, test, *, epochs: int,
+             batch_size: int, local_epochs: Optional[int] = None,
+             seed: int = 0) -> History:
+    k = store.num_clients
+    if local_epochs is None:
+        local_epochs = max(1, int(np.log2(k)) - 1)   # paper App. A
+    step = jax.jit(make_train_step(model, optimizer))
+    global_params = model.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    hist: List[float] = []
+    sizes = store.population.dataset_sizes.astype(np.float64)
+    wk = sizes / sizes.sum()
+    for _ in range(epochs):
+        locals_ = []
+        for ki in range(k):
+            st = TrainState(global_params, optimizer.init(global_params),
+                            jnp.zeros((), jnp.int32))
+            feats, labs = store.features[ki], store.labels[ki]
+            bs = min(batch_size, len(feats))
+            for _le in range(local_epochs):
+                order = rng.permutation(len(feats))
+                for i in range(0, len(feats) - bs + 1, bs):
+                    idx = order[i:i + bs]
+                    st, _ = step(st, _batch_from(feats[idx], labs[idx]))
+            locals_.append(st.params)
+        global_params = _tree_weighted_sum(locals_, wk)
+        st_eval = TrainState(global_params, None, None)
+        _epoch_eval(model, st_eval, test, hist)
+    return History(hist, {})
+
+
+# ---------------------------------------------------------------------------
+# SplitFed learning
+# ---------------------------------------------------------------------------
+
+def train_sfl(model, optimizer, store: ClientStore, test, *, epochs: int,
+              batch_size: int, seed: int = 0) -> History:
+    """SplitFed-V1: per round each client runs its local batches against the
+    shared server segment (server updates every batch); client segments are
+    FedAvg'd at the end of the round."""
+    k = store.num_clients
+    step = jax.jit(make_train_step(model, optimizer))
+    params = model.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    sizes = store.population.dataset_sizes.astype(np.float64)
+    wk = sizes / sizes.sum()
+    hist: List[float] = []
+    for _ in range(epochs):
+        client_params = []
+        server_side = params["server"]
+        for ki in range(k):
+            st = TrainState({"client": params["client"],
+                             "server": server_side},
+                            optimizer.init({"client": params["client"],
+                                            "server": server_side}),
+                            jnp.zeros((), jnp.int32))
+            feats, labs = store.features[ki], store.labels[ki]
+            bs = min(batch_size, len(feats))
+            order = rng.permutation(len(feats))
+            for i in range(0, len(feats) - bs + 1, bs):
+                idx = order[i:i + bs]
+                st, _ = step(st, _batch_from(feats[idx], labs[idx]))
+            client_params.append(st.params["client"])
+            server_side = st.params["server"]
+        params = {"client": _tree_weighted_sum(client_params, wk),
+                  "server": server_side}
+        st_eval = TrainState(params, None, None)
+        _epoch_eval(model, st_eval, test, hist)
+    return History(hist, {})

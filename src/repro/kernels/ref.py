@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function is the mathematically transparent O(naive) implementation; the
+kernel tests sweep shapes/dtypes and assert allclose against these.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """Naive softmax attention. q: (B, Hq, S, D); k, v: (B, Hkv, T, D)."""
+    b, hq, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    q_pos = jnp.arange(s)[:, None] + (t - s)   # align ends for self-attn
+    k_pos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def ssm_scan_ref(x, dt, a, bmat, cmat, h0=None):
+    """Sequential mamba1-style selective scan (the recurrence ground truth).
+
+    x, dt: (B, L, D); a: (D, N); bmat, cmat: (B, L, N).
+    h_t = exp(dt_t * a) * h_{t-1} + (dt_t * x_t) ⊗ B_t ;  y_t = h_t · C_t.
+    Returns (y (B, L, D) fp32, h_last (B, D, N) fp32).
+    """
+    bsz, l, d = x.shape
+    n = a.shape[1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = bmat.astype(jnp.float32)
+    cf = cmat.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d, n), jnp.float32)
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs   # (B,D), (B,D), (B,N), (B,N)
+        a_bar = jnp.exp(dtt[..., None] * af[None])          # (B,D,N)
+        h = a_bar * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = (h * ct[:, None, :]).sum(-1)                    # (B,D)
+        return h, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_last
+
+
+def cross_entropy_ref(hidden, w_vocab, labels):
+    """Per-token NLL with full logits. hidden: (T, d); w: (d, V); labels (T,).
+
+    Returns (nll (T,) fp32)."""
+    logits = (hidden.astype(jnp.float32) @ w_vocab.astype(jnp.float32))
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return lse - tgt

@@ -1,0 +1,418 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Optional extra XLA flags (e.g. lower backend optimization effort for the
+# single-core container's compile-time budget) — appended before jax init.
+if os.environ.get("REPRO_XLA_EXTRA"):
+    os.environ["XLA_FLAGS"] += " " + os.environ["REPRO_XLA_EXTRA"]
+
+# --- multi-pod dry-run: AOT lower+compile every (arch × shape × mesh) -------
+# The two lines above MUST precede any jax import: jax locks the device count
+# on first initialization. Smoke tests and benches do NOT import this module;
+# they see the single real CPU device.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import sharding as sh                      # noqa: E402
+from repro.configs import (ARCH_IDS, get_config, is_skipped,  # noqa: E402
+                           shape_adapted)
+from repro.core.psl import make_train_step            # noqa: E402
+from repro.launch import specs as specs_lib           # noqa: E402
+from repro.launch.hlo_analysis import (Roofline, collective_bytes,  # noqa: E402
+                                       cost_analysis_terms)
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,  # noqa: E402
+                               make_production_mesh)
+from repro.models import build_model                  # noqa: E402
+from repro.models.config import INPUT_SHAPES          # noqa: E402
+from repro.optim import TrainState, adamw, sgd        # noqa: E402
+
+
+def _opt(name: str):
+    if name == "adamw":
+        return adamw(3e-4)
+    return sgd(1e-2, momentum=0.9, weight_decay=5e-4)
+
+
+def _opt_state_shardings(opt_state_abs, params_sh, mesh):
+    rep = sh.replicated(mesh)
+    out = {}
+    for k, v in opt_state_abs.items():
+        out[k] = params_sh if k in ("mu", "m", "v") else rep
+    return out
+
+
+def _model_flops(cfg, shape, kind: str) -> float:
+    n_active = cfg.param_count(active_only=True)
+    tokens = shape.global_batch * (1 if kind == "decode" else shape.seq_len)
+    factor = 6.0 if kind == "train" else 2.0
+    return factor * n_active * tokens
+
+
+def _depth_points(cfg) -> Optional[tuple]:
+    """Two reduced depths (L1, L2) for linear per-layer extrapolation."""
+    cut = cfg.cut_layer
+    if cfg.family == "hybrid":
+        return (cut + cfg.attn_period, cut + 2 * cfg.attn_period)
+    if cfg.num_layers <= 8:
+        return None          # tiny (whisper): compile directly
+    return (cut + 2, cut + 6)
+
+
+_LINEAR_FIELDS = (
+    ("cost", "flops_per_device"), ("cost", "hbm_bytes_per_device"),
+    ("memory", "temp_bytes"), ("memory", "argument_bytes"),
+    ("memory", "output_bytes"), ("memory", "alias_bytes"),
+    ("collectives", "all-reduce"), ("collectives", "all-gather"),
+    ("collectives", "reduce-scatter"), ("collectives", "all-to-all"),
+    ("collectives", "collective-permute"), ("collectives", "total"),
+)
+
+
+def extrapolate_result(arch: str, shape_name: str, *, multi_pod: bool,
+                       opt_name: str, remat, overrides, mesh, shape,
+                       profile: str = "tp") -> Dict[str, Any]:
+    """Roofline accounting via depth extrapolation: compile the model at two
+    reduced layer counts (all other dims exact), fit per-layer costs
+    linearly, and reconstruct the full-depth totals. Sound because decoder
+    stacks are layer-homogeneous (hybrid: superblock-homogeneous); avoids
+    multi-hour full-unroll compiles on this single-core container. The full
+    configuration's lowering is separately proven by the scanned multi-pod
+    pass (--mode scan)."""
+    base_cfg = shape_adapted(get_config(arch), shape or
+                             INPUT_SHAPES[shape_name])
+    pts = _depth_points(base_cfg)
+    if pts is None:
+        return lower_and_compile(arch, shape_name, multi_pod=multi_pod,
+                                 opt_name=opt_name, remat=remat,
+                                 overrides=overrides, mesh=mesh, shape=shape,
+                                 profile=profile)
+    l1, l2 = pts
+    results = []
+    for li in (l1, l2):
+        ov = dict(overrides or {})
+        ov["num_layers"] = li
+        r = lower_and_compile(arch, shape_name, multi_pod=multi_pod,
+                              opt_name=opt_name, remat=remat, overrides=ov,
+                              mesh=mesh, shape=shape, profile=profile)
+        if r["status"] != "ok":
+            return r
+        results.append(r)
+    r1, r2 = results
+    l_full = base_cfg.num_layers
+    out = json.loads(json.dumps(r2))   # deep copy of the deeper point
+    scale = (l_full - l2) / (l2 - l1)
+    for grp, key in _LINEAR_FIELDS:
+        v1, v2 = r1[grp][key], r2[grp][key]
+        out[grp][key] = v2 + (v2 - v1) * scale
+    out["memory"]["peak_bytes_est"] = (
+        out["memory"]["argument_bytes"] + out["memory"]["output_bytes"]
+        + out["memory"]["temp_bytes"] - out["memory"]["alias_bytes"])
+    roof = Roofline(
+        flops_per_device=out["cost"]["flops_per_device"],
+        hbm_bytes_per_device=out["cost"]["hbm_bytes_per_device"],
+        collective_bytes_per_device=out["collectives"]["total"],
+        chips=out["chips"], peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW,
+        ici_bw=ICI_BW)
+    out["roofline"] = roof.as_dict()
+    mflops = _model_flops(base_cfg, shape or INPUT_SHAPES[shape_name],
+                          out["kind"])
+    out["model_flops_global"] = mflops
+    out["model_flops_per_device"] = mflops / out["chips"]
+    out["useful_flop_ratio"] = (mflops / out["chips"]) / max(
+        out["cost"]["flops_per_device"], 1.0)
+    out["params_global"] = base_cfg.param_count()
+    out["params_active"] = base_cfg.param_count(active_only=True)
+    out["analytic"] = _analytic_bytes(base_cfg, build_model(
+        dataclasses.replace(base_cfg, scan_layers=False)),
+        shape or INPUT_SHAPES[shape_name], out["chips"])
+    out["extrapolated"] = {"from_layers": [l1, l2], "to_layers": l_full,
+                           "compile_s": [r1["compile_s"], r2["compile_s"]]}
+    out["compile_s"] = round(r1["compile_s"] + r2["compile_s"], 2)
+    return out
+
+
+def lower_and_compile(arch: str, shape_name: str, *, multi_pod: bool,
+                      opt_name: str = "adamw", remat: Optional[str] = None,
+                      overrides: Optional[dict] = None,
+                      hlo_dir: Optional[str] = None,
+                      mesh=None, reduced: bool = False,
+                      shape=None, profile: str = "tp") -> Dict[str, Any]:
+    shape = shape or INPUT_SHAPES[shape_name]
+    skip = is_skipped(arch, shape_name)
+    if skip:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": skip}
+
+    overrides = dict(overrides or {})
+    act_layout = overrides.pop("activation_layout", None)
+    cfg = shape_adapted(get_config(arch, reduced=reduced), shape)
+    # Unrolled layers by default: XLA cost_analysis counts a while-loop body
+    # once, so the scanned form undercounts FLOPs/collectives by ~num_layers.
+    # Vocab is padded to a multiple of 256 (deployment-standard) so the
+    # embedding/lm_head shard over the model axis instead of replicating.
+    # Long prefills bound the number of unrolled attention q-chunks.
+    pad_vocab = -cfg.vocab_size % 256
+    cfg = dataclasses.replace(
+        cfg, scan_layers=False, vocab_size=cfg.vocab_size + pad_vocab,
+        remat="full",   # baseline: save layer inputs only (see EXPERIMENTS §Perf)
+        attn_q_chunk=max(512, shape.seq_len // 16),
+        attn_kv_chunk=max(512, shape.seq_len // 16))
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    model = build_model(cfg)
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(len(mesh.devices.flat))
+    sh.set_activation_sharding(
+        sh.activation_sharding_for(mesh, act_layout) if act_layout else None)
+    report = sh.ShardingReport()
+    params_sh = sh.model_param_shardings(model, mesh, report,
+                                         profile=profile)
+    params_abs = model.abstract_params()
+    rep = sh.replicated(mesh)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt = _opt(opt_name)
+        opt_state_abs = jax.eval_shape(opt.init, params_abs)
+        state_abs = TrainState(params=params_abs, opt_state=opt_state_abs,
+                               step=jax.ShapeDtypeStruct((), jnp.int32))
+        state_sh = TrainState(
+            params=params_sh,
+            opt_state=_opt_state_shardings(opt_state_abs, params_sh, mesh),
+            step=rep)
+        batch_abs = specs_lib.train_batch_specs(cfg, shape)
+        batch_sh = sh.batch_shardings(batch_abs, mesh, shape.global_batch,
+                                      report, profile=profile)
+        step = make_train_step(model, opt)
+        metrics_sh = {k: rep for k in ("loss", "aux_loss", "tokens",
+                                       "accuracy", "grad_norm")}
+        with mesh:
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, metrics_sh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_abs, batch_abs)
+    elif shape.kind == "prefill":
+        batch_abs = specs_lib.prefill_batch_specs(cfg, shape)
+        batch_sh = sh.batch_shardings(batch_abs, mesh, shape.global_batch,
+                                      report, profile=profile)
+        cache_len = shape.seq_len
+
+        cache_sh = sh.cache_shardings(model, mesh, shape.global_batch,
+                                      cache_len, window=cfg.sliding_window,
+                                      report=report, profile=profile)
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, cache_len=cache_len)
+
+        with mesh:
+            jitted = jax.jit(prefill_step,
+                             in_shardings=(params_sh, batch_sh),
+                             out_shardings=(rep, cache_sh, rep))
+            lowered = jitted.lower(params_abs, batch_abs)
+    else:  # decode
+        cache_len = shape.seq_len
+        cache_abs = model.init_cache(shape.global_batch, cache_len,
+                                     abstract=True)
+        cache_sh = sh.cache_shardings(model, mesh, shape.global_batch,
+                                      cache_len, report=report,
+                                      profile=profile)
+        tokens_abs, pos_abs = specs_lib.decode_inputs_specs(cfg, shape)
+        tok_sh = sh.batch_shardings(tokens_abs, mesh, shape.global_batch,
+                                    report, profile=profile)
+
+        def serve_step(params, cache, tokens, pos):
+            return model.decode_step(params, cache, tokens, pos)
+
+        with mesh:
+            jitted = jax.jit(serve_step,
+                             in_shardings=(params_sh, cache_sh, tok_sh, rep),
+                             out_shardings=(rep, cache_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, cache_abs, tokens_abs,
+                                   pos_abs)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    flops_dev, bytes_dev = cost_analysis_terms(compiled, chips)
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    if hlo_dir:
+        os.makedirs(hlo_dir, exist_ok=True)
+        with open(os.path.join(
+                hlo_dir, f"{arch}__{shape_name}.hlo.txt"), "w") as f:
+            f.write(hlo)
+    roof = Roofline(
+        flops_per_device=flops_dev, hbm_bytes_per_device=bytes_dev,
+        collective_bytes_per_device=float(coll["total"]), chips=chips,
+        peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW, ici_bw=ICI_BW)
+    mflops = _model_flops(cfg, shape, shape.kind)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok", "chips": chips, "kind": shape.kind,
+        "profile": profile,
+        "opt": opt_name if shape.kind == "train" else None,
+        "remat": cfg.remat if shape.kind == "train" else None,
+        "window": cfg.sliding_window,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_est": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "cost": {"flops_per_device": flops_dev,
+                 "hbm_bytes_per_device": bytes_dev},
+        "collectives": {k: v for k, v in coll.items() if k != "counts"},
+        "collective_counts": coll.get("counts", {}),
+        "roofline": roof.as_dict(),
+        "model_flops_global": mflops,
+        "model_flops_per_device": mflops / chips,
+        "useful_flop_ratio": (mflops / chips) / max(flops_dev, 1.0),
+        "sharding_fallbacks": report.fallbacks,
+        "params_global": cfg.param_count(),
+        "params_active": cfg.param_count(active_only=True),
+        "analytic": _analytic_bytes(cfg, model, shape, chips),
+    }
+    return result
+
+
+def _analytic_bytes(cfg, model, shape, chips) -> Dict[str, float]:
+    """First-principles per-device byte floors (context for cost_analysis's
+    every-op 'bytes accessed' upper bound)."""
+    import numpy as np
+    p_bytes = cfg.param_count() * 2  # bf16
+    out = {"params_bytes_per_device": p_bytes / chips}
+    if shape.kind == "decode":
+        cache = model.init_cache(shape.global_batch, shape.seq_len,
+                                 abstract=True)
+        c_bytes = sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                      for x in jax.tree_util.tree_leaves(cache))
+        out["cache_bytes_per_device"] = c_bytes / chips
+        out["min_step_bytes_per_device"] = (p_bytes + c_bytes) / chips
+    elif shape.kind == "train":
+        act = (shape.global_batch * shape.seq_len * cfg.d_model * 2
+               * cfg.num_layers)           # saved layer inputs (remat=full)
+        opt = cfg.param_count() * 8        # adam m+v fp32
+        out["opt_bytes_per_device"] = opt / chips
+        out["saved_activation_bytes_per_device"] = act / chips
+        out["min_step_bytes_per_device"] = \
+            (3 * p_bytes + opt + act) / chips   # params+grads+flow + opt + acts
+    else:
+        act = shape.global_batch * shape.seq_len * cfg.d_model * 2
+        out["min_step_bytes_per_device"] = (p_bytes + act) / chips
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--opt", default="adamw", choices=["adamw", "sgd"])
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--hlo-dir", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--override", default=None,
+                    help="json dict of ModelConfig overrides (perf exps)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for output filenames (perf exps)")
+    ap.add_argument("--sharding", default="tp", choices=["tp", "fsdp", "ddp"],
+                    help="server-segment sharding profile (perf exps)")
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "full", "scan", "extrapolate"],
+                    help="auto: decode=full-unroll, train/prefill=depth-"
+                         "extrapolated; scan: scanned layers (lowering "
+                         "proof pass, cheap); full: full unroll")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = (list(INPUT_SHAPES) if args.shape == "all"
+              else args.shape.split(","))
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    overrides = json.loads(args.override) if args.override else None
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    failures = []
+    for multi in meshes:
+        for arch in archs:
+            for shp in shapes:
+                mesh_name = "multi" if multi else "single"
+                tag = f"__{args.tag}" if args.tag else ""
+                path = os.path.join(
+                    args.out_dir, f"{mesh_name}__{arch}__{shp}{tag}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip-existing] {path}")
+                    continue
+                print(f"=== {mesh_name} | {arch} | {shp} ===", flush=True)
+                shape_cfg = INPUT_SHAPES[shp]
+                mode = args.mode
+                if mode == "auto":
+                    mode = ("full" if shape_cfg.kind == "decode"
+                            else "extrapolate")
+                try:
+                    if mode == "extrapolate":
+                        res = extrapolate_result(
+                            arch, shp, multi_pod=multi, opt_name=args.opt,
+                            remat=args.remat, overrides=overrides,
+                            mesh=None, shape=None, profile=args.sharding)
+                    else:
+                        ov = dict(overrides or {})
+                        if mode == "scan":
+                            ov["scan_layers"] = True
+                        res = lower_and_compile(
+                            arch, shp, multi_pod=multi, opt_name=args.opt,
+                            remat=args.remat, overrides=ov or None,
+                            hlo_dir=args.hlo_dir, profile=args.sharding)
+                        if mode == "scan":
+                            res["mode"] = "scan"
+                except Exception as e:  # noqa: BLE001 - report, keep going
+                    res = {"arch": arch, "shape": shp, "mesh": mesh_name,
+                           "status": "error", "error": repr(e)[:2000]}
+                    failures.append((arch, shp, mesh_name, repr(e)[:200]))
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                if res["status"] == "ok":
+                    r = res["roofline"]
+                    print(f"    ok: compile={res['compile_s']}s "
+                          f"compute={r['compute_s']:.4f}s "
+                          f"memory={r['memory_s']:.4f}s "
+                          f"collective={r['collective_s']:.4f}s "
+                          f"bottleneck={r['bottleneck']} "
+                          f"peak_mem={res['memory']['peak_bytes_est']/2**30:.2f}GiB",
+                          flush=True)
+                elif res["status"] == "skipped":
+                    print(f"    skipped: {res['reason']}")
+                else:
+                    print(f"    ERROR: {res['error'][:300]}")
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall requested combos lowered+compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""HLO analysis: collective-byte accounting + roofline terms.
+
+``collective_bytes`` parses the optimized (SPMD-partitioned, per-device) HLO
+text and sums the result-shape bytes of every communication op. Shapes in the
+partitioned module are PER-DEVICE shapes, so the sums are bytes moved per
+device — the physically meaningful quantity for the link-bandwidth roofline
+term (equivalently: the brief's global `collective_bytes / chips`).
+
+Ring-algorithm volume factors: an all-reduce moves ~2× its buffer per device
+(reduce-scatter + all-gather phases); all-gather / reduce-scatter / all-to-all
+/ collective-permute move ~1×.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result shape(s) at line start:  %name = bf16[1,2,3]{...} all-reduce(...)
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<shapes>\([^)]*\)|[\w\[\],\s{}]+?)\s+"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(",
+    re.MULTILINE)
+
+_SHAPE_RE = re.compile(r"(?P<dt>\w+)\[(?P<dims>[\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = int(np.prod([int(d) for d in dims.split(",") if d])) if dims \
+            else 1
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved, by collective kind (+ 'total')."""
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    counts: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        op = m.group("op")
+        # async pairs: count the -start, skip the matching -done
+        full = hlo_text[m.start():m.end()]
+        if "-done(" in full:
+            continue
+        b = _shape_bytes(m.group("shapes"))
+        factor = 2 if op == "all-reduce" else 1
+        out[op] += b * factor
+        counts[op] += 1
+    out_total = sum(out.values())
+    result = {**{k: int(v) for k, v in out.items()}, "total": int(out_total)}
+    result["counts"] = counts  # type: ignore
+    return result
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    """Three-term roofline for one compiled step on one mesh."""
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    chips: int
+    peak_flops: float
+    hbm_bw: float
+    ici_bw: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / self.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / self.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower-bound step time: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck, "step_time_s": self.step_time_s,
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+        }
+
+
+def cost_analysis_terms(compiled, mesh_size: int) -> Tuple[float, float]:
+    """(flops, bytes) per device from compiled.cost_analysis().
+
+    XLA's cost analysis on the SPMD-partitioned module reports per-device
+    numbers already (shapes in the module are per-device)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    nbytes = sum(float(v) for k, v in ca.items()
+                 if k.startswith("bytes accessed"))
+    # "bytes accessed" + per-operand entries double count; prefer the plain
+    # key when present.
+    if "bytes accessed" in ca:
+        nbytes = float(ca["bytes accessed"])
+    return flops, nbytes

@@ -1,0 +1,80 @@
+"""ShapeDtypeStruct input factories for every (arch × input shape) workload.
+
+``input_specs`` returns weak-type-correct, shardable stand-ins for all step
+inputs — no device allocation (the dry-run path). ``materialize_batch``
+produces a synthetic concrete batch of the same shapes (trainer/examples).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import INPUT_SHAPES, ModelConfig, ShapeConfig
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    text = s - cfg.num_patches if cfg.family == "vlm" else s
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, text), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, text), jnp.int32),
+        "weights": jax.ShapeDtypeStruct((b, text), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        # labels/weights cover the text tokens only; the model pads the
+        # patch positions with zero weight internally.
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.d_model), cfg.jnp_dtype)
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), cfg.jnp_dtype)
+    return specs
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig
+                        ) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    text = s - cfg.num_patches if cfg.family == "vlm" else s
+    specs = {"tokens": jax.ShapeDtypeStruct((b, text), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.d_model), cfg.jnp_dtype)
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), cfg.jnp_dtype)
+    return specs
+
+
+def decode_inputs_specs(cfg: ModelConfig, shape: ShapeConfig
+                        ) -> Tuple[Any, Any]:
+    b = shape.global_batch
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return tokens, pos
+
+
+def materialize_batch(cfg: ModelConfig, batch_size: int, seq_len: int,
+                      seed: int = 0, kind: str = "train") -> Dict[str, Any]:
+    """Concrete synthetic batch matching train_batch_specs shapes."""
+    rng = np.random.default_rng(seed)
+    text = seq_len - cfg.num_patches if cfg.family == "vlm" else seq_len
+    toks = rng.integers(0, cfg.vocab_size, (batch_size, text))
+    batch: Dict[str, Any] = {"tokens": jnp.asarray(toks, jnp.int32)}
+    if kind == "train":
+        labels = np.roll(toks, -1, axis=1)
+        batch["labels"] = jnp.asarray(labels, jnp.int32)
+        batch["weights"] = jnp.ones((batch_size, text), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(scale=0.02,
+                       size=(batch_size, cfg.num_patches, cfg.d_model)),
+            cfg.jnp_dtype)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(scale=0.02,
+                       size=(batch_size, cfg.encoder_seq, cfg.d_model)),
+            cfg.jnp_dtype)
+    return batch

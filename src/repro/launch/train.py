@@ -1,0 +1,197 @@
+"""End-to-end PSL training driver (runs on real devices: CPU here, TPU pod
+with the production mesh in deployment).
+
+Wires together: config registry → model → sharded train step → UGS/LDS epoch
+plans → the plan-driven LM data pipeline → checkpointing. Used by
+``examples/train_transformer.py`` and the integration tests.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b --reduced \
+      --steps 100 --global-batch 16 --seq-len 128 --method ugs
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim as optim_lib
+from repro import sharding as shard_lib
+from repro.checkpoint import restore, save
+from repro.configs import get_config
+from repro.core import sampling as sampling_lib
+from repro.core.psl import make_train_step, slot_weights
+from repro.core.types import ClientPopulation
+from repro.data.synthetic import make_lm_dataset
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.optim import TrainState
+
+
+def build_lm_client_store(cfg, num_clients: int, sequences: int,
+                          seq_len: int, seed: int = 0):
+    """Non-IID LM federation: clients get style-skewed sequence sets."""
+    toks, styles = make_lm_dataset(sequences, seq_len + 1, cfg.vocab_size,
+                                   num_styles=max(2, num_clients // 2),
+                                   seed=seed)
+    rng = np.random.default_rng(seed)
+    # each client holds 1-2 styles (non-IID over sequence styles)
+    order = np.argsort(styles, kind="stable")
+    parts = np.array_split(order, num_clients)
+    class_counts = np.zeros((num_clients, styles.max() + 1), np.int64)
+    for k, p in enumerate(parts):
+        class_counts[k] = np.bincount(styles[p], minlength=styles.max() + 1)
+    pop = ClientPopulation(dataset_sizes=np.array([len(p) for p in parts]),
+                           class_counts=class_counts,
+                           delays=np.zeros(num_clients))
+    data = [toks[p] for p in parts]
+    return data, pop
+
+
+class PSLTrainer:
+    """Sharded PSL trainer over an arbitrary mesh."""
+
+    def __init__(self, cfg, optimizer=None, mesh=None,
+                 aggregation: str = "global_mean"):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.optimizer = optimizer or optim_lib.adamw(1e-3)
+        self.mesh = mesh or make_host_mesh()
+        self.aggregation = aggregation
+        report = shard_lib.ShardingReport()
+        self.params_sh = shard_lib.model_param_shardings(self.model,
+                                                         self.mesh, report)
+        self.report = report
+        self._step = None
+
+    def init_state(self, seed: int = 0) -> TrainState:
+        with self.mesh:
+            params = jax.jit(
+                self.model.init,
+                out_shardings=self.params_sh)(jax.random.PRNGKey(seed))
+            opt_state = jax.jit(self.optimizer.init)(params)
+        return TrainState(params=params, opt_state=opt_state,
+                          step=jnp.zeros((), jnp.int32))
+
+    def step_fn(self):
+        if self._step is None:
+            step = make_train_step(self.model, self.optimizer)
+            self._step = jax.jit(step, donate_argnums=(0,))
+        return self._step
+
+    def train_epoch(self, state: TrainState, data, pop, plan,
+                    seq_len: int, seed: int = 0,
+                    max_steps: Optional[int] = None):
+        """One PSL epoch from an EpochPlan over per-client token arrays."""
+        rng = np.random.default_rng(seed)
+        orders = [rng.permutation(len(d)) for d in data]
+        cursors = np.zeros(len(data), np.int64)
+        metrics_hist = []
+        step = self.step_fn()
+        b = plan.global_batch_size
+        with self.mesh:
+            for t in range(plan.num_steps):
+                if max_steps is not None and t >= max_steps:
+                    break
+                sizes = plan.local_batch_sizes[t]
+                rows, ids = [], []
+                for k in range(len(data)):
+                    n = int(sizes[k])
+                    if n == 0:
+                        continue
+                    idx = orders[k][cursors[k]:cursors[k] + n]
+                    cursors[k] += n
+                    rows.append(data[k][idx])
+                    ids.append(np.full(n, k))
+                toks = np.concatenate(rows)
+                cids = np.concatenate(ids)
+                if toks.shape[0] < b:
+                    pad = b - toks.shape[0]
+                    toks = np.concatenate(
+                        [toks, np.zeros((pad, toks.shape[1]), toks.dtype)])
+                    cids = np.concatenate([cids, np.full(pad, -1)])
+                w = slot_weights(cids, sizes, pop.dataset_sizes,
+                                 self.aggregation)
+                batch = {
+                    "tokens": jnp.asarray(toks[:, :seq_len], jnp.int32),
+                    "labels": jnp.asarray(toks[:, 1:seq_len + 1], jnp.int32),
+                    "weights": jnp.asarray(
+                        np.repeat(w[:, None], seq_len, 1)),
+                }
+                state, metrics = step(state, batch)
+                metrics_hist.append(
+                    {k: float(v) for k, v in metrics.items()})
+        return state, metrics_hist
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--epochs", type=int, default=1)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--sequences", type=int, default=2048)
+    ap.add_argument("--method", default="ugs",
+                    choices=["ugs", "lds", "fpls", "fls"])
+    ap.add_argument("--aggregation", default="global_mean")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--d-model", type=int, default=None,
+                    help="override d_model (e.g. ~100M-param presets)")
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    over: Dict[str, Any] = {"max_seq_len": max(args.seq_len, 256)}
+    if args.d_model:
+        over.update(d_model=args.d_model,
+                    num_heads=max(4, args.d_model // 64),
+                    num_kv_heads=max(2, args.d_model // 128),
+                    d_ff=args.d_model * 4)
+    if args.layers:
+        over["num_layers"] = args.layers
+    cfg = dataclasses.replace(cfg, **over)
+
+    trainer = PSLTrainer(cfg, optim_lib.adamw(args.lr))
+    state = trainer.init_state(args.seed)
+    data, pop = build_lm_client_store(cfg, args.clients, args.sequences,
+                                      args.seq_len, seed=args.seed)
+    n_params = sum(int(np.prod(x.shape)) for x in
+                   jax.tree_util.tree_leaves(state.params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M clients={pop.num_clients} "
+          f"D0={pop.total_size} method={args.method}")
+
+    done = 0
+    for epoch in range(args.epochs):
+        plan = sampling_lib.make_plan(args.method, pop, args.global_batch,
+                                      seed=args.seed + epoch)
+        t0 = time.time()
+        state, hist = trainer.train_epoch(
+            state, data, pop, plan, args.seq_len, seed=args.seed + epoch,
+            max_steps=args.steps - done)
+        done += len(hist)
+        for i, m in enumerate(hist):
+            if i % 10 == 0 or i == len(hist) - 1:
+                print(f"  epoch {epoch} step {i:4d} loss={m['loss']:.4f} "
+                      f"acc={m['accuracy']:.3f} gnorm={m['grad_norm']:.2f}")
+        print(f"epoch {epoch}: {len(hist)} steps in {time.time()-t0:.1f}s "
+              f"(final loss {hist[-1]['loss']:.4f})")
+        if done >= args.steps:
+            break
+    if args.checkpoint:
+        save(args.checkpoint, state.params)
+        print("checkpoint saved to", args.checkpoint)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Optimizers (pytree-based, optax-like API).
+
+The paper uses mini-batch SGD with momentum 0.9, lr 1e-2, weight decay 5e-4
+(App. A) — ``sgd`` reproduces that. ``adamw`` is provided for the LLM-family
+architectures. Both keep their slots in fp32 regardless of param dtype
+(mixed-precision master-quality updates), casting back on apply.
+"""
+from repro.optim.optimizers import (Optimizer, TrainState, adamw, apply_updates,
+                                    sgd)
+
+__all__ = ["Optimizer", "TrainState", "sgd", "adamw", "apply_updates"]

@@ -1,0 +1,88 @@
+"""SGD(+momentum, weight decay) and AdamW over arbitrary pytrees."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]   # (grads, state, params)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def _cast_like(tree, ref):
+    return jax.tree_util.tree_map(lambda t, r: t.astype(r.dtype), tree, ref)
+
+
+def sgd(lr: float, momentum: float = 0.9, weight_decay: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params):
+        def upd(g, mu, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            mu_new = momentum * mu + g
+            step_dir = (g + momentum * mu_new) if nesterov else mu_new
+            return -lr * step_dir, mu_new
+        flat = jax.tree_util.tree_map(upd, grads, state["mu"], params)
+        updates = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"mu": mu}
+
+    return Optimizer(init=init, update=update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            mhat = m_new / c1
+            vhat = v_new / c2
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return -lr * step, m_new, v_new
+
+        flat = jax.tree_util.tree_map(upd, grads, state["m"], state["v"],
+                                      params)
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda t: t[i], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2), "count": count}
+
+    return Optimizer(init=init, update=update)

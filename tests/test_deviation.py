@@ -1,0 +1,89 @@
+"""Batch deviation: Lemma bounds hold empirically; Fig. 6/7 orderings."""
+import numpy as np
+import pytest
+
+from repro.core import (ClientPopulation, batch_deviation, fls_plan,
+                        fpls_plan, lds_plan, lemma1_bound, lemma2_bound,
+                        lemma2_terms, simulate_plan_deviation, ugs_plan)
+
+
+def _noniid_pop(k=16, m=10, seed=0):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(50, 400, size=k)
+    counts = np.zeros((k, m), np.int64)
+    for i in range(k):
+        cls = rng.choice(m, 2, replace=False)
+        s = rng.integers(0, sizes[i] + 1)
+        counts[i, cls[0]] = s
+        counts[i, cls[1]] = sizes[i] - s
+    return ClientPopulation(sizes, counts, np.zeros(k))
+
+
+def test_lemma1_bound_holds():
+    """Chebyshev bound on central uniform sampling deviation."""
+    rng = np.random.default_rng(0)
+    m, b, eps = 5, 64, 0.15
+    beta0 = rng.dirichlet(np.ones(m) * 2)
+    draws = rng.multinomial(b, beta0, size=20000)
+    bound = lemma1_bound(b, beta0, eps)
+    for mi in range(m):
+        p_emp = np.mean(np.abs(draws[:, mi] / b - beta0[mi]) >= eps)
+        assert p_emp <= bound[mi] + 0.02
+
+
+def test_lemma2_bias_term_zero_iff_proportional():
+    pop = _noniid_pop(seed=1)
+    beta = pop.class_distributions
+    beta0 = pop.overall_distribution
+    b = 64
+    bk_prop = b * pop.dataset_sizes / pop.total_size     # Theorem 1 premise
+    t = lemma2_terms(bk_prop, beta, beta0)
+    assert np.abs(t["bias_sq"]).max() < 1e-6
+    assert np.all(t["variance"] <= t["central_variance"] + 1e-9)  # Jensen
+    bk_fixed = np.full(pop.num_clients, b / pop.num_clients)
+    t2 = lemma2_terms(bk_fixed, beta, beta0)
+    assert t2["bias_sq"].max() > 1e-2   # non-IID + fixed sizes → bias
+
+
+def test_fig6_ordering_noniid():
+    """UGS deviation << FPLS/FLS under strong non-IID (the paper's Fig. 6)."""
+    pop = _noniid_pop(k=16, seed=2)
+    b = 128
+    dev = {}
+    dev["ugs"] = simulate_plan_deviation(ugs_plan(pop, b, seed=0), pop,
+                                         seed=0).mean
+    dev["fpls"] = simulate_plan_deviation(fpls_plan(pop, b), pop,
+                                          seed=0).mean
+    dev["fls"] = simulate_plan_deviation(fls_plan(pop, b), pop, seed=0).mean
+    assert dev["ugs"] < dev["fpls"]
+    assert dev["ugs"] < dev["fls"]
+
+
+def test_fig7_lds_delta_tradeoff():
+    """Higher Δ increases deviation, but stays below FLS (Fig. 7)."""
+    pop = _noniid_pop(k=16, seed=3)
+    pop.delays[:] = 0.0
+    pop.delays[:3] = 400.0
+    b = 128
+    d0 = simulate_plan_deviation(lds_plan(pop, b, delta=0.0, seed=1), pop,
+                                 seed=0).mean
+    d15 = simulate_plan_deviation(lds_plan(pop, b, delta=1.5, seed=1), pop,
+                                  seed=0).mean
+    dfls = simulate_plan_deviation(fls_plan(pop, b), pop, seed=0).mean
+    assert d0 <= d15 + 0.02           # Δ raises deviation (or ties)
+    assert d15 < dfls                  # but far below fixed local sampling
+
+
+def test_iid_all_methods_similar():
+    pop = ClientPopulation.homogeneous(16, 200, 10, seed=4)
+    b = 128
+    devs = [simulate_plan_deviation(p, pop, seed=0).mean
+            for p in (ugs_plan(pop, b, seed=0), fpls_plan(pop, b),
+                      fls_plan(pop, b))]
+    assert max(devs) - min(devs) < 0.12
+
+
+def test_batch_deviation_definition():
+    beta0 = np.array([0.5, 0.5])
+    assert batch_deviation(np.array([5, 5]), beta0) == 0
+    assert abs(batch_deviation(np.array([10, 0]), beta0) - 1.0) < 1e-9

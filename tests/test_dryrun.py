@@ -1,0 +1,77 @@
+"""Multi-device dry-run machinery, exercised in a subprocess with 16 forced
+host devices (XLA locks device count at first jax init, so the main test
+process — which uses the single real CPU device — cannot host this)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import json, dataclasses
+import jax
+from repro.launch import dryrun
+from repro.models.config import ShapeConfig
+
+mesh = jax.make_mesh((4, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+results = {}
+shape_tr = ShapeConfig("train_tiny", 64, 16, "train")
+shape_de = ShapeConfig("decode_tiny", 128, 16, "decode")
+shape_pf = ShapeConfig("prefill_tiny", 64, 8, "prefill")
+for arch, shapes in [
+    ("granite-3-2b", [shape_tr, shape_de, shape_pf]),
+    ("falcon-mamba-7b", [shape_tr, shape_de]),
+    ("granite-moe-3b-a800m", [shape_tr]),
+    ("zamba2-2.7b", [shape_tr, shape_de]),
+    ("whisper-tiny", [shape_tr, shape_de]),
+]:
+    for shape in shapes:
+        r = dryrun.lower_and_compile(arch, shape.name, multi_pod=False,
+                                     mesh=mesh, reduced=True, shape=shape)
+        results[f"{arch}|{shape.name}"] = {
+            "status": r["status"],
+            "flops": r.get("cost", {}).get("flops_per_device", 0),
+            "coll": r.get("collectives", {}).get("total", -1),
+            "err": r.get("error", "")[:500],
+        }
+print("RESULTS_JSON:" + json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_16dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1500)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULTS_JSON:")][0]
+    results = json.loads(line[len("RESULTS_JSON:"):])
+    for key, r in results.items():
+        assert r["status"] == "ok", (key, r["err"])
+        assert r["flops"] > 0, key
+        assert r["coll"] >= 0, key
+
+
+def test_whisper_long500k_documented_skip():
+    from repro.configs import is_skipped
+    assert is_skipped("whisper-tiny", "long_500k")
+    assert not is_skipped("whisper-tiny", "decode_32k")
+    assert not is_skipped("falcon-mamba-7b", "long_500k")
+
+
+def test_long500k_gets_sliding_window():
+    from repro.configs import get_config, shape_adapted
+    from repro.models.config import INPUT_SHAPES
+    cfg = shape_adapted(get_config("llama3-8b"), INPUT_SHAPES["long_500k"])
+    assert cfg.sliding_window == 8192
+    cfg2 = shape_adapted(get_config("falcon-mamba-7b"),
+                         INPUT_SHAPES["long_500k"])
+    assert cfg2.sliding_window is None     # SSM runs natively
+    cfg3 = shape_adapted(get_config("llama3-8b"), INPUT_SHAPES["train_4k"])
+    assert cfg3.sliding_window is None

@@ -1,0 +1,93 @@
+"""EM-MAP estimator: Proposition 1, monotonicity, numpy↔JAX agreement."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import em as em_lib
+
+
+def _problem(k=5, m=8, seed=0, n=1000):
+    rng = np.random.default_rng(seed)
+    beta = rng.dirichlet(np.ones(m) * 0.5, size=k)
+    pi_true = rng.dirichlet(np.ones(k))
+    mix = pi_true @ beta
+    nu = rng.multinomial(n, mix).astype(np.float64)
+    alpha = rng.uniform(1.0, 50.0, size=k)
+    return nu, beta, alpha, pi_true
+
+
+def test_m_step_closed_form_is_argmax():
+    """Proposition 1: the closed-form M-step maximizes Q + log prior."""
+    rng = np.random.default_rng(0)
+    k = 4
+    n_k = rng.uniform(10, 100, size=k)
+    alpha = rng.uniform(2.0, 20.0, size=k)
+    n = n_k.sum()
+    pi_star = (n_k + alpha - 1) / (n + alpha.sum() - k)
+
+    def objective(pi):
+        return (n_k * np.log(pi)).sum() + ((alpha - 1) * np.log(pi)).sum()
+
+    base = objective(pi_star)
+    for _ in range(200):   # random simplex perturbations never improve
+        d = rng.normal(size=k) * 0.01
+        d -= d.mean()
+        cand = pi_star + d
+        if (cand <= 0).any():
+            continue
+        cand = cand / cand.sum()
+        assert objective(cand) <= base + 1e-9
+
+
+def test_em_monotone_posterior():
+    nu, beta, alpha, _ = _problem(seed=1)
+    rng = np.random.default_rng(2)
+    pi = rng.dirichlet(alpha)
+    prev = -np.inf
+    for _ in range(30):
+        res = em_lib.em_map(nu, pi, beta, alpha, tau=0, max_iters=1)
+        post = em_lib.log_posterior(res.pi, nu, beta, alpha)
+        assert post >= prev - 1e-6
+        prev = post
+        pi = res.pi
+
+
+def test_em_recovers_mixture():
+    nu, beta, alpha, pi_true = _problem(k=3, m=20, seed=3, n=200_000)
+    # weak prior ∝ pi_true scale keeps MAP near MLE
+    res = em_lib.em_map(nu, np.ones(3) / 3, beta,
+                        np.ones(3) * 1.0, tau=1e-10, max_iters=5000)
+    assert res.converged
+    mix_est = res.pi @ beta
+    mix_true = pi_true @ beta
+    assert np.abs(mix_est - mix_true).max() < 0.01
+
+
+def test_em_numpy_vs_jax():
+    nu, beta, alpha, _ = _problem(seed=4)
+    pi0 = np.ones(5) / 5
+    res = em_lib.em_map(nu, pi0, beta, alpha, tau=1e-6)
+    pi_j, iters_j, conv_j = em_lib.em_map_jax(nu, pi0, beta, alpha, tau=1e-6)
+    assert bool(conv_j)
+    assert np.abs(np.asarray(pi_j) - res.pi).max() < 1e-3
+
+
+def test_em_active_mask():
+    nu, beta, alpha, _ = _problem(seed=5)
+    active = np.array([True, True, False, True, False])
+    res = em_lib.em_map(nu, np.ones(5) / 5, beta, alpha, active=active)
+    assert np.all(res.pi[~active] == 0)
+    assert abs(res.pi.sum() - 1) < 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(2, 10), m=st.integers(2, 12), seed=st.integers(0, 100))
+def test_em_output_on_simplex(k, m, seed):
+    rng = np.random.default_rng(seed)
+    beta = rng.dirichlet(np.ones(m), size=k)
+    nu = rng.multinomial(500, np.ones(m) / m).astype(float)
+    alpha = rng.uniform(0.5, 30.0, size=k)   # includes alpha<1 edge case
+    res = em_lib.em_map(nu, np.ones(k) / k, beta, alpha)
+    assert np.all(res.pi >= 0)
+    assert abs(res.pi.sum() - 1) < 1e-6
+    assert res.iterations <= 10_000

@@ -1,0 +1,108 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(the kernel body executes in Python on CPU; TPU is the lowering target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.cross_entropy import fused_cross_entropy
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssm_scan import ssm_scan
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("b,s,hq,hkv,d", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 256, 8, 2, 64),     # GQA 4:1
+    (1, 128, 8, 1, 128),    # MQA
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None)])
+def test_flash_attention_sweep(dtype, b, s, hq, hkv, d, causal, window):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, hq, s, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_kv=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("block_q,block_kv", [(32, 128), (128, 32)])
+def test_flash_attention_block_shapes(block_q, block_kv):
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 32)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, block_q=block_q,
+                          block_kv=block_kv, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("b,l,d,n", [(1, 64, 128, 8), (2, 128, 256, 16),
+                                     (1, 32, 128, 4)])
+def test_ssm_scan_sweep(dtype, b, l, d, n):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(b, l, d)), dtype)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, l, d)), dtype)
+    a = -jnp.asarray(rng.uniform(0.2, 1.5, (d, n)), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, l, n)), dtype)
+    cm = jnp.asarray(rng.normal(size=(b, l, n)), dtype)
+    y, h = ssm_scan(x, dt, a, bm, cm, block_l=16, block_d=64,
+                    interpret=True)
+    yr, hr = ref.ssm_scan_ref(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("t,d,v", [(64, 32, 512), (128, 64, 1024),
+                                   (32, 16, 50176)])
+def test_fused_cross_entropy_sweep(dtype, t, d, v):
+    rng = np.random.default_rng(3)
+    h = jnp.asarray(rng.normal(size=(t, d)), dtype)
+    w = jnp.asarray(rng.normal(size=(d, v)), dtype)
+    lab = jnp.asarray(rng.integers(0, v, t), jnp.int32)
+    got = fused_cross_entropy(h, w, lab, block_t=32, block_v=256,
+                              interpret=True)
+    want = ref.cross_entropy_ref(h, w, lab)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **_tol(dtype))
+
+
+def test_ops_wrappers_model_layout():
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.normal(size=(2, 128, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 128, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 128, 2, 32)), jnp.float32)
+    got = ops.attention(q, k, v, causal=True, interpret=True)
+    want = jnp.swapaxes(ref.attention_ref(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        causal=True), 1, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_kernel_matches_model_attention():
+    """The Pallas kernel and the model's blockwise attention agree — the
+    kernel is a drop-in for the perf-critical path on real TPUs."""
+    from repro.models import layers as L
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(1, 128, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 128, 2, 32)), jnp.float32)
+    a = ops.attention(q, k, v, causal=True, window=32, interpret=True)
+    b = L.blockwise_attention(q, k, v, causal=True, window=32,
+                              q_chunk=32, kv_chunk=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

@@ -1,0 +1,144 @@
+"""Sampler invariants (Algorithms 1 & 3) + chunked≡sequential equivalence."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ClientPopulation, fls_plan, fpls_plan, lds_plan,
+                        make_plan, ugs_plan)
+from repro.core.sampling import _draw_step_counts, _draw_step_counts_sequential
+
+
+def _pop(k=8, per=100, m=10, seed=0, skew=False):
+    rng = np.random.default_rng(seed)
+    if skew:
+        sizes = rng.integers(20, 400, size=k)
+        counts = np.zeros((k, m), np.int64)
+        for i in range(k):
+            classes = rng.choice(m, 2, replace=False)
+            split = rng.integers(0, sizes[i] + 1)
+            counts[i, classes[0]] = split
+            counts[i, classes[1]] = sizes[i] - split
+        return ClientPopulation(sizes, counts, np.zeros(k))
+    return ClientPopulation.homogeneous(k, per, m, seed=seed)
+
+
+@pytest.mark.parametrize("method", ["ugs", "lds", "fpls", "fls"])
+@pytest.mark.parametrize("skew", [False, True])
+def test_plans_deplete_exactly(method, skew):
+    pop = _pop(skew=skew, seed=3)
+    plan = make_plan(method, pop, 64, seed=1)
+    # every client's dataset fully consumed, never oversampled
+    assert np.all(plan.local_batch_sizes >= 0)
+    assert np.array_equal(plan.local_batch_sizes.sum(0), pop.dataset_sizes)
+
+
+@pytest.mark.parametrize("method", ["ugs", "lds"])
+def test_global_batch_exact(method):
+    """UGS/LDS: every non-final step has exactly B samples (the decoupling
+    of effective batch size from K — the paper's central property)."""
+    pop = _pop(k=16, skew=True, seed=5)
+    plan = make_plan(method, pop, 96, seed=2)
+    sums = plan.local_batch_sizes.sum(1)
+    assert np.all(sums[:-1] == 96)
+    assert 0 < sums[-1] <= 96
+    assert plan.num_steps == int(np.ceil(pop.total_size / 96))
+
+
+def test_fls_effective_batch_scales_with_k():
+    """The failure mode UGS removes: FLS effective batch grows with K."""
+    b = 64
+    eff = []
+    for k in (8, 32):
+        pop = ClientPopulation.homogeneous(k, 100, 10)
+        plan = fls_plan(pop, b)
+        eff.append(plan.local_batch_sizes.sum(1).max())
+    assert eff[0] == eff[1] == max(64, 8)  # B'=max(1,round(B/K)) * K
+    pop = ClientPopulation.homogeneous(128, 100, 10)
+    assert fls_plan(pop, b).local_batch_sizes.sum(1).max() == 128  # K > B
+
+
+def test_ugs_proportionality():
+    """E[B_k^t] ≈ B * D_k / D (client-selection probabilities ∝ sizes)."""
+    pop = _pop(k=6, skew=True, seed=7)
+    plans = [ugs_plan(pop, 64, seed=s) for s in range(20)]
+    first_rows = np.stack([p.local_batch_sizes[0] for p in plans])
+    expect = 64 * pop.dataset_sizes / pop.total_size
+    got = first_rows.mean(0)
+    assert np.abs(got - expect).max() < 6 * np.sqrt(expect.max())
+
+
+def test_chunked_matches_sequential_distribution():
+    """Chunked multinomial draws ≡ Algorithm 1's per-draw loop."""
+    pop = _pop(k=4, per=40, seed=11)
+    pi = pop.dataset_sizes / pop.total_size
+    n_trials = 3000
+    budget = 30
+    counts_c = np.zeros((n_trials, 4))
+    counts_s = np.zeros((n_trials, 4))
+    for t in range(n_trials):
+        rng1 = np.random.default_rng(1000 + t)
+        rng2 = np.random.default_rng(5000 + t)
+        counts_c[t], _ = _draw_step_counts(rng1, budget, pi.copy(),
+                                           pop.dataset_sizes)
+        counts_s[t], _ = _draw_step_counts_sequential(rng2, budget, pi.copy(),
+                                                      pop.dataset_sizes)
+    # compare means and variances per client
+    assert np.allclose(counts_c.mean(0), counts_s.mean(0), atol=0.5)
+    assert np.allclose(counts_c.std(0), counts_s.std(0), atol=0.5)
+
+
+def test_lds_delta0_matches_ugs_proportions():
+    """Δ=0: EM converges to π ∝ D_k (UGS as a special case of LDS)."""
+    pop = _pop(k=8, skew=True, seed=13)
+    plan = lds_plan(pop, 64, delta=0.0, seed=3)
+    pi0 = plan.pi_history[0]
+    expect = pop.dataset_sizes / pop.total_size
+    assert np.abs(pi0 - expect).max() < 0.05
+
+
+def test_lds_straggler_depletion_order():
+    """Higher Δ concentrates stragglers early: their datasets deplete in
+    fewer steps than under Δ=0."""
+    pop = _pop(k=8, per=200, seed=17)
+    pop.delays[:] = 0.0
+    pop.delays[:2] = 500.0   # two stragglers
+    def depletion_step(plan, k):
+        cum = plan.local_batch_sizes[:, k].cumsum()
+        return int(np.argmax(cum >= pop.dataset_sizes[k]))
+    p0 = lds_plan(pop, 64, delta=0.0, seed=5)
+    p2 = lds_plan(pop, 64, delta=2.0, seed=5)
+    d0 = np.mean([depletion_step(p0, k) for k in range(2)])
+    d2 = np.mean([depletion_step(p2, k) for k in range(2)])
+    assert d2 < d0
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.integers(2, 12), b=st.integers(4, 100), seed=st.integers(0, 99))
+def test_ugs_properties(k, b, seed):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(1, 60, size=k)
+    m = 5
+    counts = rng.multinomial(1, np.ones(m) / m, size=(k,)) * 0
+    counts = np.zeros((k, m), np.int64)
+    for i in range(k):
+        counts[i] = rng.multinomial(sizes[i], np.ones(m) / m)
+    pop = ClientPopulation(sizes, counts, np.zeros(k))
+    plan = ugs_plan(pop, b, seed=seed)
+    plan.validate_against(pop)
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(2, 8), b=st.integers(8, 64), seed=st.integers(0, 20),
+       delta=st.sampled_from([0.0, 0.5, 1.5]), reinit=st.booleans())
+def test_lds_properties(k, b, seed, delta, reinit):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(5, 80, size=k)
+    m = 4
+    counts = np.zeros((k, m), np.int64)
+    for i in range(k):
+        counts[i] = rng.multinomial(sizes[i], np.ones(m) / m)
+    delays = rng.uniform(0, 300, size=k) * (rng.random(k) < 0.3)
+    pop = ClientPopulation(sizes, counts, delays)
+    plan = lds_plan(pop, b, delta=delta, reinit=reinit, seed=seed)
+    plan.validate_against(pop)
+    assert plan.em_iterations >= 1
