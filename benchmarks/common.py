@@ -6,13 +6,18 @@ from typing import Callable, List
 
 
 def time_us(fn: Callable, *args, repeat: int = 5, warmup: int = 1,
-            **kwargs) -> float:
+            best: bool = False, **kwargs) -> float:
+    """Mean (default) or best-of (``best=True``, for jit-compiled
+    steady-state measurements) wall-clock per call, in microseconds."""
     for _ in range(warmup):
         fn(*args, **kwargs)
-    t0 = time.perf_counter()
+    times = []
     for _ in range(repeat):
+        t0 = time.perf_counter()
         fn(*args, **kwargs)
-    return (time.perf_counter() - t0) / repeat * 1e6
+        times.append(time.perf_counter() - t0)
+    agg = min(times) if best else sum(times) / len(times)
+    return agg * 1e6
 
 
 class Csv:

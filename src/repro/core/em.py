@@ -23,6 +23,7 @@ documented in DESIGN.md and exercised in tests.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Tuple
 
 import numpy as np
@@ -110,12 +111,14 @@ def log_posterior(pi: np.ndarray, nu: np.ndarray, beta: np.ndarray,
 # JAX implementation (vectorized, lax.while_loop)
 # ---------------------------------------------------------------------------
 
-def em_map_jax(nu, pi_init, beta, alpha, tau: float = 1e-5,
-               max_iters: int = 10_000, active=None) -> Tuple:
-    """JAX twin of :func:`em_map`. Returns (pi, iterations, converged).
+def em_update_jax(nu, pi_init, beta, alpha, active, tau,
+                  max_iters: int) -> Tuple:
+    """Pure traceable MAP-EM core: (pi, iterations, final ||Δpi||).
 
-    Shapes are static; the while loop carries (pi, iter, delta). Suitable for
-    jit and for running the estimator on-device next to the training step.
+    All array arguments may be concrete values *or* tracers — this is the
+    function the vectorized epoch planner (:mod:`repro.core.planner`) inlines
+    inside its jitted LDS draw loop so that every ``RemoveComponent``
+    re-estimation stays on-device. Only ``max_iters`` must be a static int.
     """
     import jax
     import jax.numpy as jnp
@@ -124,11 +127,8 @@ def em_map_jax(nu, pi_init, beta, alpha, tau: float = 1e-5,
     beta = jnp.asarray(beta, jnp.float32)
     alpha = jnp.asarray(alpha, jnp.float32)
     pi0 = jnp.asarray(pi_init, jnp.float32)
-    k = pi0.shape[0]
-    if active is None:
-        active = jnp.ones((k,), bool)
-    else:
-        active = jnp.asarray(active, bool)
+    active = jnp.asarray(active, bool)
+    tau = jnp.asarray(tau, jnp.float32)
 
     pi0 = jnp.where(active, pi0, 0.0)
     pi0 = pi0 / jnp.maximum(pi0.sum(), _EPS)
@@ -137,21 +137,76 @@ def em_map_jax(nu, pi_init, beta, alpha, tau: float = 1e-5,
     alpha0 = jnp.where(active, alpha, 0.0).sum()
     denom_m = jnp.maximum(n_total + alpha0 - k_active, _EPS)
 
-    def body(carry):
-        pi_old, it, _ = carry
-        w = pi_old[:, None] * beta
-        gamma_hat = w / jnp.maximum(w.sum(axis=0, keepdims=True), _EPS)
-        n_k = gamma_hat @ nu
+    # (M, K) copy so both matvecs below reduce along their contiguous axis
+    beta_t = beta.T
+
+    def update(pi_old):
+        # E+M step in matvec form: n_k = sum_m gamma_km nu_m with
+        # gamma_km = pi_k beta_km / mix_m and mix = beta^T pi. Algebraically
+        # identical to materializing the (K, M) responsibilities (the
+        # NumPy reference's literal Eq. 5 form) but needs only two matvecs.
+        mix = jnp.maximum(beta_t @ pi_old, _EPS)        # (M,)
+        n_k = pi_old * (beta @ (nu / mix))              # (K,)
         pi = jnp.where(active, (n_k + alpha - 1.0) / denom_m, 0.0)
         pi = jnp.maximum(pi, jnp.where(active, _PI_FLOOR, 0.0))
-        pi = pi / jnp.maximum(pi.sum(), _EPS)
-        delta = jnp.linalg.norm(pi - pi_old)
-        return pi, it + 1, delta
+        return pi / jnp.maximum(pi.sum(), _EPS)
+
+    def body(carry):
+        # two updates per loop trip: the convergence check (and the CPU
+        # while-loop dispatch overhead) is paid every other iteration. The
+        # delta is the *single-step* movement ||pi_2 - pi_1|| — the same
+        # criterion as the NumPy reference, evaluated every other step, so
+        # at most one extra refining update runs past tau.
+        pi_old, it, _ = carry
+        pi_mid = update(pi_old)
+        pi = update(pi_mid)
+        delta = jnp.linalg.norm(pi - pi_mid)
+        return pi, it + 2, delta
 
     def cond(carry):
+        # only take a double-step trip while two updates fit the budget
         _, it, delta = carry
-        return jnp.logical_and(it < max_iters, delta >= tau)
+        return jnp.logical_and(it + 1 < max_iters, delta >= tau)
 
-    pi, iters, delta = jax.lax.while_loop(
+    pi, it, delta = jax.lax.while_loop(
         cond, body, (pi0, jnp.int32(0), jnp.float32(jnp.inf)))
+
+    def last_step(carry):
+        # spend the odd remaining iteration of the max_iters budget
+        pi_old, it, _ = carry
+        pi = update(pi_old)
+        return pi, it + 1, jnp.linalg.norm(pi - pi_old)
+
+    return jax.lax.cond(
+        jnp.logical_and(it < max_iters, delta >= tau),
+        last_step, lambda c: c, (pi, it, delta))
+
+
+@functools.lru_cache(maxsize=None)
+def _em_jit(max_iters: int):
+    """jit-compiled wrapper of :func:`em_update_jax`, cached per max_iters."""
+    import jax
+
+    def run(nu, pi0, beta, alpha, active, tau):
+        return em_update_jax(nu, pi0, beta, alpha, active, tau, max_iters)
+
+    return jax.jit(run)
+
+
+def em_map_jax(nu, pi_init, beta, alpha, tau: float = 1e-5,
+               max_iters: int = 10_000, active=None) -> Tuple:
+    """JAX twin of :func:`em_map`. Returns (pi, iterations, converged).
+
+    Shapes are static; the while loop carries (pi, iter, delta). The
+    compiled executable is cached per ``max_iters`` (shapes/dtypes handled
+    by jit's own cache), so repeated re-estimations — e.g. one per
+    ``RemoveComponent`` event across an LDS epoch — pay tracing cost once.
+    """
+    import numpy as _np
+
+    k = _np.shape(pi_init)[0]
+    if active is None:
+        active = _np.ones((k,), bool)
+    pi, iters, delta = _em_jit(int(max_iters))(
+        nu, pi_init, beta, alpha, active, float(tau))
     return pi, iters, delta < tau

@@ -1,0 +1,346 @@
+"""Vectorized JAX planner engine for global sampling (UGS / LDS).
+
+The NumPy samplers in :mod:`repro.core.sampling` are the *reference*
+implementation: literal, host-bound transcriptions of Algorithms 1 and 3
+whose per-step Python loops and O(K) multinomial redraws make epoch planning
+cost scale with the client count K. This module re-expresses the hot path as
+a single jit-compiled device program so one device call plans the full epoch
+(measured ≥10x faster than the NumPy path for K ≥ 16384, see
+benchmarks/fig3_sampling_time.py and docs/sampling.md).
+
+Design (UGS, Algorithm 1):
+  * the T-step epoch loop is a ``lax.scan`` over fixed-size (K,) state;
+  * selection probabilities are represented as an *exact integer CDF*
+    (cumsum of the remaining-masked dataset sizes) and slots are drawn by
+    integer inverse-CDF sampling: ``randint`` + ``searchsorted``. No
+    floating-point renormalization anywhere — P(z=k) = w_k / W exactly;
+  * the CDF is *frozen* across draw rounds: a draw landing on a client that
+    depleted after the freeze is simply rejected, which conditions the
+    categorical on the alive set — exactly the renormalized distribution of
+    Algorithm 1. The CDF is recomputed only when fewer than half of a
+    round's candidates are accepted (amortized O(log) refreshes per epoch);
+  * each step draws an *overdrawn* chunk of C = 3B/2 candidates, keeps the
+    first `need` valid ones in candidate order (the temporal order of iid
+    draws, so the cutoff is distributionally exact), caps each client at its
+    remaining budget, and loops only for the small capping deficit — the
+    same count-level exchangeability argument as the NumPy chunked sampler.
+
+Design (LDS, Algorithm 3): identical chunked draw loop over a float CDF of
+the EM-estimated π, with every ``RemoveComponent`` event triggering the
+MAP-EM re-estimation *inside* the traced loop via
+:func:`repro.core.em.em_update_jax` (a ``lax.cond`` around the EM
+while-loop), so replanning never leaves the device.
+
+One compiled executable is cached per static configuration (K, T, B,
+reinit, max_em_iters); replanning every epoch — the common case, since
+plans are redrawn per epoch seed — reuses it.
+
+Invariants (identical to the NumPy backend, checked in
+tests/test_planner.py): every non-final plan row sums to exactly B, the
+final row to D mod B (or B), and columns sum to the client dataset sizes —
+epochs deplete every dataset exactly.
+
+Known differences from the NumPy backend, by design:
+  * randomness comes from JAX's ``rbg`` PRNG, not NumPy's PCG64 — plans for
+    a given seed differ *draw-wise* between backends but are identical in
+    distribution (tested statistically in tests/test_planner.py);
+  * plans are returned as int32 (a (T, K) plan at K = 65536 is large; int32
+    halves the footprint). LDS's EM runs in float32 on-device vs float64 on
+    the host; deviations are below sampling noise for all tested K.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+
+from repro.core import em as em_lib
+from repro.core.sampling import _num_steps
+from repro.core.types import ClientPopulation, EpochPlan
+
+_EPS = 1e-12
+
+# Overdraw factor: each draw round samples C = B * _OVERDRAW_NUM //
+# _OVERDRAW_DEN candidates so that stale-CDF rejections are absorbed in one
+# round and the while-loop iterates only for capping deficits.
+_OVERDRAW_NUM = 3
+_OVERDRAW_DEN = 2
+
+# Above this many (T, K) entries the per-step π history is not recorded by
+# default — at large scale it would rival the plan itself in memory.
+_PI_HISTORY_MAX_ENTRIES = 32_000_000
+
+
+# ---------------------------------------------------------------------------
+# Compiled epoch planners
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _ugs_device_fn(t_steps: int, b: int, k: int):
+    """Compiled UGS epoch planner for a static (T, B, K) configuration."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    chunk = max(b * _OVERDRAW_NUM // _OVERDRAW_DEN, b + 1)
+
+    def plan_fn(sizes, key):
+        sizes = sizes.astype(jnp.int32)
+
+        def fresh_cdf(rem):
+            # Exact integer CDF over non-depleted clients; client k owns the
+            # half-open interval [cdf_{k-1}, cdf_k) of width w_k.
+            return jnp.cumsum(jnp.where(rem > 0, sizes, 0))
+
+        def draw_step(carry, key_t):
+            rem_in, rem_total, cdf = carry
+            budget = jnp.minimum(b, rem_total)
+
+            def cond(state):
+                return state[0] > 0
+
+            def body(state):
+                need, rem, rem_sum, cdf, kk = state
+                kk, sub = jax.random.split(kk)
+                total = cdf[-1]
+                u = jax.random.randint(sub, (chunk,), 0,
+                                       jnp.maximum(total, 1), jnp.int32)
+                z = jnp.clip(jnp.searchsorted(cdf, u, side="right"), 0, k - 1)
+                # Reject draws on clients that depleted since the CDF froze
+                # (conditioning == renormalizing), then keep the first `need`
+                # valid candidates in draw order.
+                valid = rem[z] > 0
+                keep = valid & (jnp.cumsum(valid.astype(jnp.int32)) <= need)
+                counts = jnp.zeros((k,), jnp.int32).at[z].add(
+                    keep.astype(jnp.int32), mode="promise_in_bounds")
+                # take = min(counts, rem) fused into the rem update; the
+                # number of filled slots falls out of the running total.
+                rem = jnp.maximum(rem - counts, 0)
+                rem_sum_next = rem.sum()
+                got = rem_sum - rem_sum_next
+                need_next = need - got
+                # Refresh the CDF when under half the *requested* slots were
+                # filled; also guarantees progress (got == 0 refreshes).
+                stale = (need_next > 0) & (2 * got < need)
+                cdf = lax.cond(stale, lambda: fresh_cdf(rem), lambda: cdf)
+                return need_next, rem, rem_sum_next, cdf, kk
+
+            init = (budget, rem_in, rem_total, cdf, key_t)
+            _, rem_out, rem_total, cdf, _ = lax.while_loop(cond, body, init)
+            return (rem_out, rem_total, cdf), rem_in - rem_out
+
+        cdf0 = fresh_cdf(sizes)
+        keys = jax.random.split(key, t_steps)
+        (_, _, _), plan = lax.scan(draw_step, (sizes, sizes.sum(), cdf0),
+                                   keys)
+        return plan
+
+    return jax.jit(plan_fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _lds_device_fn(t_steps: int, b: int, k: int, reinit: bool,
+                   max_em_iters: int, record_pi: bool):
+    """Compiled LDS epoch planner for a static configuration.
+
+    The scan carry is (remaining, active, π, cdf, em_total); EM
+    re-estimation after RemoveComponent happens under a ``lax.cond`` inside
+    the chunk-draw while-loop, exactly mirroring the NumPy control flow.
+    The float CDF over π is recomputed only when π changes (after EM).
+    With ``record_pi`` the scan also emits the (T, K) per-step π matrix
+    (diagnostics; skipped at large scale where it would rival the plan in
+    memory).
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    def draw_prior(key, active, alpha):
+        a = jnp.where(active, jnp.maximum(alpha, _EPS), _EPS)
+        pi = jax.random.dirichlet(key, a.astype(jnp.float32))
+        pi = jnp.where(active, pi, 0.0)
+        return pi / jnp.maximum(pi.sum(), _EPS)
+
+    def run_em(pi, active, nu, beta, alpha, tau):
+        pi_new, iters, _ = em_lib.em_update_jax(
+            nu, pi, beta, alpha, active, tau, max_em_iters)
+        return pi_new, iters
+
+    def plan_fn(sizes, nu, beta, alpha, tau, key):
+        sizes = sizes.astype(jnp.int32)
+        active0 = sizes > 0
+
+        key, k_prior = jax.random.split(key)
+        pi0, em0 = run_em(draw_prior(k_prior, active0, alpha),
+                          active0, nu, beta, alpha, tau)
+
+        def draw_step(carry, key_t):
+            remaining, active, pi, cdf, em_total = carry
+            budget = jnp.minimum(b, remaining.sum()).astype(jnp.int32)
+
+            def cond(state):
+                return state[0] > 0
+
+            def body(state):
+                need, counts, active, pi, cdf, em_total, kk = state
+                kk, k_draw, k_redraw = jax.random.split(kk, 3)
+                u = jax.random.uniform(k_draw, (b,), jnp.float32) * cdf[-1]
+                z = jnp.clip(jnp.searchsorted(cdf, u, side="right"), 0, k - 1)
+                live = (jnp.arange(b) < need).astype(jnp.int32)
+                chunk = jnp.zeros((k,), jnp.int32).at[z].add(
+                    live, mode="promise_in_bounds")
+                rem = remaining - counts
+                take = jnp.minimum(chunk, rem)
+                counts = counts + take
+                need = need - take.sum()
+                newly = ((remaining - counts) == 0) & active
+                active_new = active & ~newly
+                do_replan = newly.any() & active_new.any()
+
+                def replan(key_r):
+                    if reinit:                      # R=1: re-draw from prior
+                        base = draw_prior(key_r, active_new, alpha)
+                    else:                           # R=0: warm-start from π
+                        base = jnp.where(active_new, pi, 0.0)
+                        base = base / jnp.maximum(base.sum(), _EPS)
+                    pi_new, iters = run_em(base, active_new, nu, beta,
+                                           alpha, tau)
+                    return pi_new, jnp.cumsum(pi_new), iters
+
+                def keep(_key_r):
+                    return pi, cdf, jnp.int32(0)
+
+                pi, cdf, iters = lax.cond(do_replan, replan, keep, k_redraw)
+                return (need, counts, active_new, pi, cdf,
+                        em_total + iters, kk)
+
+            init = (budget, jnp.zeros((k,), jnp.int32), active, pi, cdf,
+                    em_total, key_t)
+            _, counts, active, pi, cdf, em_total, _ = lax.while_loop(
+                cond, body, init)
+            return ((remaining - counts, active, pi, cdf, em_total),
+                    (counts, pi) if record_pi else counts)
+
+        keys = jax.random.split(key, t_steps)
+        carry0 = (sizes, active0, pi0, jnp.cumsum(pi0), em0)
+        (_, _, _, _, em_total), ys = lax.scan(draw_step, carry0, keys)
+        plan, pi_steps = ys if record_pi else (ys, None)
+        return plan, pi_steps, pi0, em_total
+
+    return jax.jit(plan_fn)
+
+
+# ---------------------------------------------------------------------------
+# Host-facing wrappers
+# ---------------------------------------------------------------------------
+
+def _prng_key(seed: int):
+    import jax
+    # rbg is substantially faster than the default threefry on CPU and is a
+    # counter-based generator of equal statistical quality for sampling.
+    return jax.random.key(seed, impl="rbg")
+
+
+def ugs_plan_jax(pop: ClientPopulation, global_batch_size: int,
+                 seed: int = 0) -> EpochPlan:
+    """Uniform Global Sampling (Algorithm 1), jit-compiled epoch planning.
+
+    Drop-in distributional equivalent of
+    :func:`repro.core.sampling.ugs_plan`; one device call per epoch.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    b = int(global_batch_size)
+    total = pop.total_size
+    if total >= np.iinfo(np.int32).max:
+        raise ValueError("jax planner requires total dataset size < 2^31")
+    t_steps = _num_steps(total, b)
+    fn = _ugs_device_fn(t_steps, b, pop.num_clients)
+    plan = fn(jnp.asarray(pop.dataset_sizes, jnp.int32), _prng_key(seed))
+    return EpochPlan(local_batch_sizes=np.asarray(jax.device_get(plan)),
+                     global_batch_size=b, method="ugs")
+
+
+def lds_plan_jax(pop: ClientPopulation, global_batch_size: int,
+                 delta: float = 0.0, tau: float = 1e-5,
+                 reinit: bool = False, seed: int = 0,
+                 sample_size: Optional[int] = None,
+                 max_em_iters: int = 10_000,
+                 record_pi_history: Optional[bool] = None) -> EpochPlan:
+    """Latent Dirichlet Sampling (Algorithm 3), jit-compiled epoch planning.
+
+    Drop-in distributional equivalent of
+    :func:`repro.core.sampling.lds_plan`: prior draw, MAP-EM, chunked
+    depletion-aware draws, and EM replanning on every RemoveComponent all
+    execute inside one device program. ``pi_history`` holds the initial π
+    followed by the π in effect after each step (the NumPy backend instead
+    records one entry per re-estimation). ``record_pi_history=None`` (auto)
+    skips the per-step history when the (T, K) matrix would exceed
+    ``_PI_HISTORY_MAX_ENTRIES`` — at that scale it rivals the plan itself
+    in memory — leaving only the initial π.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import sampling as sampling_lib
+
+    b = int(global_batch_size)
+    if pop.total_size >= np.iinfo(np.int32).max:
+        raise ValueError("jax planner requires total dataset size < 2^31")
+    t_steps = _num_steps(pop.total_size, b)
+    if record_pi_history is None:
+        record_pi_history = (t_steps * pop.num_clients
+                             <= _PI_HISTORY_MAX_ENTRIES)
+
+    nu = pop.class_counts.sum(axis=0).astype(np.float64)
+    if sample_size is not None:
+        nu = nu / max(nu.sum(), 1.0) * float(sample_size)
+    alpha = sampling_lib.initialize_concentration(pop, delta,
+                                                  sample_size=sample_size)
+
+    fn = _lds_device_fn(t_steps, b, pop.num_clients, bool(reinit),
+                        int(max_em_iters), bool(record_pi_history))
+    plan, pi_steps, pi0, em_total = fn(
+        jnp.asarray(pop.dataset_sizes, jnp.int32),
+        jnp.asarray(nu, jnp.float32),
+        jnp.asarray(pop.class_distributions, jnp.float32),
+        jnp.asarray(alpha, jnp.float32),
+        jnp.float32(tau),
+        _prng_key(seed))
+    pi_hist = [np.asarray(pi0, np.float64)]
+    if pi_steps is not None:
+        pi_hist += list(np.asarray(jax.device_get(pi_steps), np.float64))
+    return EpochPlan(local_batch_sizes=np.asarray(jax.device_get(plan)),
+                     global_batch_size=b,
+                     method=f"lds(delta={delta},R={int(reinit)})",
+                     em_iterations=int(em_total), pi_history=pi_hist)
+
+
+def jax_available() -> bool:
+    """True when a usable jax is importable (the engine's only dependency)."""
+    try:
+        import jax  # noqa: F401
+        return True
+    except Exception:  # pragma: no cover - jax is baked into the image
+        return False
+
+
+# Population size above which ``backend="auto"`` switches from the NumPy
+# reference to the compiled engine: below this, jit dispatch and compile
+# overheads beat the NumPy loop; above it the device program wins by an
+# order of magnitude (see benchmarks/fig3_sampling_time.py).
+AUTO_BACKEND_MIN_CLIENTS = 4096
+
+
+def resolve_backend(backend: str, num_clients: int) -> str:
+    """Map a requested backend ("numpy" | "jax" | "auto") to a concrete one."""
+    backend = backend.lower()
+    if backend == "auto":
+        if num_clients >= AUTO_BACKEND_MIN_CLIENTS and jax_available():
+            return "jax"
+        return "numpy"
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown planner backend: {backend!r}")
+    return backend

@@ -21,6 +21,12 @@ the overflow under the renormalized π. Because only the per-step *counts*
 enter the plan and draws are exchangeable within a step, the chunked process
 induces the same count distribution as the sequential one; a statistical test
 (tests/test_sampling.py) compares both against an exact sequential reference.
+
+Backends: this module holds the NumPy *reference* implementation (exact,
+float64, host-bound). ``ugs_plan``/``lds_plan``/``make_plan`` accept
+``backend="numpy" | "jax" | "auto"``; "jax" dispatches to the vectorized
+jit-compiled engine in :mod:`repro.core.planner`, which plans an epoch for
+K up to 10⁵–10⁶ clients in one device call. See docs/sampling.md.
 """
 from __future__ import annotations
 
@@ -112,14 +118,27 @@ def _draw_step_counts(rng: np.random.Generator, budget: int,
 
 def ugs_plan(pop: ClientPopulation, global_batch_size: int,
              seed: int = 0,
-             sequential: bool = False) -> EpochPlan:
+             sequential: bool = False,
+             backend: str = "numpy") -> EpochPlan:
     """Uniform Global Sampling (Algorithm 1).
 
     π_k = D_k / D; each of T=⌈D/B⌉ steps assigns B slots to clients via
     Categorical(π), zeroing and renormalizing π on depletion. Every client's
     dataset is fully consumed over the epoch and each non-final global batch
     has exactly B samples — the effective batch size no longer depends on K.
+
+    ``backend="jax"`` routes to the jit-compiled engine in
+    :mod:`repro.core.planner` (same count distribution, different PRNG);
+    ``"auto"`` picks it for large K. ``sequential=True`` forces the literal
+    per-draw NumPy reference and is incompatible with the jax backend.
     """
+    from repro.core import planner as planner_lib
+    if sequential and backend.lower() == "auto":
+        backend = "numpy"       # only the reference implements sequential
+    if planner_lib.resolve_backend(backend, pop.num_clients) == "jax":
+        if sequential:
+            raise ValueError("sequential reference draws are numpy-only")
+        return planner_lib.ugs_plan_jax(pop, global_batch_size, seed=seed)
     rng = np.random.default_rng(seed)
     d = pop.dataset_sizes.astype(np.float64)
     total = int(d.sum())
@@ -184,7 +203,9 @@ def lds_plan(pop: ClientPopulation, global_batch_size: int,
              delta: float = 0.0, tau: float = 1e-5,
              reinit: bool = False, seed: int = 0,
              sample_size: Optional[int] = None,
-             max_em_iters: int = 10_000) -> EpochPlan:
+             max_em_iters: int = 10_000,
+             backend: str = "numpy",
+             record_pi_history: Optional[bool] = None) -> EpochPlan:
     """Latent Dirichlet Sampling (Algorithm 3).
 
     π is the MAP estimate of the mixture proportions under a Dir(α) prior,
@@ -194,7 +215,20 @@ def lds_plan(pop: ClientPopulation, global_batch_size: int,
     is removed and EM re-estimates π — warm-started from the running π when
     ``reinit=False`` (R=0), or re-drawn from the prior when ``reinit=True``
     (R=1).
+
+    ``backend="jax"`` routes to the jit-compiled engine in
+    :mod:`repro.core.planner`, which keeps the chunked draws *and* every
+    RemoveComponent EM re-estimation on-device; ``"auto"`` picks it for
+    large K. ``record_pi_history`` only affects the jax backend (see
+    :func:`repro.core.planner.lds_plan_jax`); the NumPy path's history is
+    per-re-estimation and always recorded.
     """
+    from repro.core import planner as planner_lib
+    if planner_lib.resolve_backend(backend, pop.num_clients) == "jax":
+        return planner_lib.lds_plan_jax(
+            pop, global_batch_size, delta=delta, tau=tau, reinit=reinit,
+            seed=seed, sample_size=sample_size, max_em_iters=max_em_iters,
+            record_pi_history=record_pi_history)
     rng = np.random.default_rng(seed)
     k = pop.num_clients
     b = int(global_batch_size)
@@ -261,13 +295,21 @@ def lds_plan(pop: ClientPopulation, global_batch_size: int,
 # ---------------------------------------------------------------------------
 
 def make_plan(method: str, pop: ClientPopulation, global_batch_size: int,
-              seed: int = 0, **kwargs) -> EpochPlan:
-    """Uniform entry point used by the data pipeline / trainer."""
+              seed: int = 0, backend: str = "numpy", **kwargs) -> EpochPlan:
+    """Uniform entry point used by the data pipeline / trainer.
+
+    ``backend`` selects the planner engine for the stochastic samplers:
+    "numpy" (exact reference, default), "jax" (jit-compiled vectorized
+    engine — one device call per epoch), or "auto" (jax for K ≥
+    ``planner.AUTO_BACKEND_MIN_CLIENTS``). The fixed baselines are
+    deterministic rolls and always run on the host.
+    """
     method = method.lower()
     if method == "ugs":
-        return ugs_plan(pop, global_batch_size, seed=seed)
+        return ugs_plan(pop, global_batch_size, seed=seed, backend=backend)
     if method == "lds":
-        return lds_plan(pop, global_batch_size, seed=seed, **kwargs)
+        return lds_plan(pop, global_batch_size, seed=seed, backend=backend,
+                        **kwargs)
     if method == "fpls":
         return fpls_plan(pop, global_batch_size)
     if method == "fls":

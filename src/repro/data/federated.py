@@ -6,6 +6,15 @@ the global batches of an :class:`EpochPlan`: for step t it asks each client
 with B_k^t > 0 for that many locally-uniform-without-replacement samples and
 fills the static (B, ...) buffer together with client-id tags and the
 slot-weight vector implementing the chosen gradient aggregation.
+
+Batch assembly is vectorized: the store caches one client-major flat copy of
+the shards, and each iterator composes the per-client random visit orders
+into a single (D,) index permutation over it — so a step's global batch is
+one fancy-index gather (`repeat` of per-client cursors + within-run offsets,
+mapped through the permutation) instead of a Python loop over K clients.
+Host-side assembly cost is independent of the client count, matching the
+vectorized planner engine (repro.core.planner), and per-epoch state is an
+integer permutation rather than a copy of the data.
 """
 from __future__ import annotations
 
@@ -29,17 +38,59 @@ class ClientStore:
     def from_partition(cls, features: np.ndarray, labels: np.ndarray,
                        parts: List[np.ndarray], population: ClientPopulation
                        ) -> "ClientStore":
-        return cls(features=[features[p] for p in parts],
-                   labels=[labels[p] for p in parts],
-                   population=population)
+        # one flat client-major copy; per-client shards are views into it,
+        # so the vectorized iterator's flat_arrays() costs no second copy
+        lengths = np.array([len(p) for p in parts], dtype=np.int64)
+        base = np.cumsum(lengths) - lengths
+        flat_f = features[np.concatenate(parts)] if parts else \
+            np.zeros((0,) + features.shape[1:], features.dtype)
+        flat_l = labels[np.concatenate(parts)] if parts else \
+            np.zeros((0,), labels.dtype)
+        store = cls(features=[flat_f[b:b + n] for b, n in zip(base, lengths)],
+                    labels=[flat_l[b:b + n] for b, n in zip(base, lengths)],
+                    population=population)
+        object.__setattr__(store, "_flat_cache", (flat_f, flat_l, base))
+        return store
 
     @property
     def num_clients(self) -> int:
         return len(self.features)
 
+    def flat_arrays(self):
+        """(flat_features, flat_labels, base) — shards concatenated
+        client-major, client k starting at base[k]. Built once and cached;
+        iterators permute in index space rather than copying the data."""
+        cached = getattr(self, "_flat_cache", None)
+        if cached is None:
+            if not self.features:
+                cached = (np.zeros((0,)), np.zeros((0,), np.int64),
+                          np.zeros((0,), np.int64))
+            else:
+                lengths = np.array([len(f) for f in self.features],
+                                   dtype=np.int64)
+                cached = (np.concatenate(self.features),
+                          np.concatenate(self.labels),
+                          np.cumsum(lengths) - lengths)
+            object.__setattr__(self, "_flat_cache", cached)
+        return cached
+
+
+def _run_offsets(sizes: np.ndarray) -> np.ndarray:
+    """Within-run offsets [0..n_0), [0..n_1), ... for `repeat`-built gathers."""
+    total = int(sizes.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    starts = np.repeat(np.cumsum(sizes) - sizes, sizes)
+    return np.arange(total, dtype=np.int64) - starts
+
 
 class GlobalBatchIterator:
-    """Iterates the global batches of one epoch plan."""
+    """Iterates the global batches of one epoch plan.
+
+    Equivalent to asking client k for its next B_k^t locally-shuffled
+    samples at each step; implemented as vectorized gathers against a flat
+    permuted copy of the shards.
+    """
 
     def __init__(self, store: ClientStore, plan: EpochPlan,
                  aggregation: str = "global_mean", seed: int = 0,
@@ -49,27 +100,38 @@ class GlobalBatchIterator:
         self.aggregation = aggregation
         self.pad_to = pad_to or plan.global_batch_size
         rng = np.random.default_rng(seed)
-        # per-client random visit order = uniform sampling w/o replacement
-        self._order = [rng.permutation(len(f)) for f in store.features]
-        self._cursor = np.zeros(store.num_clients, dtype=np.int64)
+        # per-client random visit order = uniform sampling w/o replacement,
+        # composed into one (D,) index map over the store's cached flat
+        # arrays — the per-epoch state is an integer permutation, not a
+        # copy of the data. One lexsort by (client, random key) permutes
+        # every client's segment at once: no O(K) Python loop.
+        self._flat_features, self._flat_labels, self._base = \
+            store.flat_arrays()
+        d_total = self._flat_labels.shape[0]
+        lengths = np.diff(np.append(self._base, d_total))
+        cids = np.repeat(np.arange(store.num_clients, dtype=np.int64),
+                         lengths)
+        self._perm = np.lexsort((rng.random(d_total), cids))
+        self._client_ids = np.arange(store.num_clients, dtype=np.int64)
+        self._consumed = False
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
-        feat0 = self.store.features[0]
+        # single-use per epoch: a silent second pass would replay the exact
+        # same batches (same permutation), masking double-consume bugs
+        if self._consumed:
+            raise RuntimeError(
+                "GlobalBatchIterator is single-use; construct a new one "
+                "(with a fresh seed) for another epoch")
+        self._consumed = True
+        cursor = np.zeros(self.store.num_clients, dtype=np.int64)
         for t in range(self.plan.num_steps):
-            sizes = self.plan.local_batch_sizes[t]
-            picks_f, picks_l, ids = [], [], []
-            for k in range(self.store.num_clients):
-                n = int(sizes[k])
-                if n == 0:
-                    continue
-                idx = self._order[k][self._cursor[k]:self._cursor[k] + n]
-                self._cursor[k] += n
-                picks_f.append(self.store.features[k][idx])
-                picks_l.append(self.store.labels[k][idx])
-                ids.append(np.full(n, k, dtype=np.int64))
-            feats = np.concatenate(picks_f)
-            labs = np.concatenate(picks_l)
-            cids = np.concatenate(ids)
+            sizes = np.asarray(self.plan.local_batch_sizes[t], dtype=np.int64)
+            idx = self._perm[np.repeat(self._base + cursor, sizes)
+                             + _run_offsets(sizes)]
+            cursor = cursor + sizes
+            feats = self._flat_features[idx]
+            labs = self._flat_labels[idx]
+            cids = np.repeat(self._client_ids, sizes)
             b = self.pad_to
             if feats.shape[0] < b:     # final ragged step → pad + mask
                 pad = b - feats.shape[0]

@@ -94,8 +94,15 @@ def train_psl(model, optimizer, store: ClientStore, test, *, epochs: int,
               global_batch_size: int, method: str = "ugs",
               aggregation: str = "global_mean", seed: int = 0,
               sampler_kwargs: Optional[dict] = None,
+              planner_backend: str = "numpy",
               track_tpe: bool = False, base_step_ms: float = 60.0
               ) -> History:
+    """PSL training loop. ``planner_backend`` selects the epoch-plan engine:
+    "numpy" (default — the exact reference, seed-for-seed reproducible
+    against published runs), "jax" (vectorized engine, different PRNG), or
+    "auto" (jax for large K). Opt into "jax"/"auto" for large federations;
+    plans then match the reference in distribution but not draw-for-draw.
+    """
     from repro.core.straggler import simulate_tpe
     step = jax.jit(make_train_step(model, optimizer))
     params = model.init(jax.random.PRNGKey(seed))
@@ -107,6 +114,7 @@ def train_psl(model, optimizer, store: ClientStore, test, *, epochs: int,
     for e in range(epochs):
         plan = sampling_lib.make_plan(method, store.population,
                                       global_batch_size, seed=seed + e,
+                                      backend=planner_backend,
                                       **(sampler_kwargs or {}))
         em_iters += plan.em_iterations
         if track_tpe:

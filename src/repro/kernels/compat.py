@@ -1,0 +1,16 @@
+"""Version compatibility shims for the Pallas TPU API.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` around
+0.5; resolve whichever name the installed jax provides so the kernels run on
+both sides of the rename.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+
+if CompilerParams is None:          # pragma: no cover - version guard
+    def CompilerParams(*_args, **_kwargs):
+        raise ImportError(
+            "this jax exposes neither pallas.tpu.CompilerParams nor "
+            "TPUCompilerParams; the TPU kernels need a jax providing one")

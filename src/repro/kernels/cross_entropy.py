@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 _NEG_INF = -1e30
 
 
@@ -91,7 +93,7 @@ def fused_cross_entropy(hidden, w_vocab, labels, *, block_t: int = 256,
             pltpu.VMEM((block_t,), jnp.float32),
             pltpu.VMEM((block_t,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(hidden, w_vocab, labels)

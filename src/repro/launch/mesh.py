@@ -15,12 +15,21 @@ HBM_BW = 819e9                    # per chip, B/s
 ICI_BW = 50e9                     # per link, B/s
 
 
+def _make_mesh(shape, axes):
+    # jax.sharding.AxisType (and make_mesh's axis_types kwarg) only exist on
+    # newer jax; older versions default every axis to Auto anyway.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1):
@@ -28,6 +37,4 @@ def make_host_mesh(model_axis: int = 1):
     n = len(jax.devices())
     model_axis = min(model_axis, n)
     data = n // model_axis
-    axis_types = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((data, model_axis), ("data", "model"),
-                         axis_types=axis_types)
+    return _make_mesh((data, model_axis), ("data", "model"))

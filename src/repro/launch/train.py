@@ -142,6 +142,13 @@ def main():
     ap.add_argument("--sequences", type=int, default=2048)
     ap.add_argument("--method", default="ugs",
                     choices=["ugs", "lds", "fpls", "fls"])
+    ap.add_argument("--planner-backend", default="numpy",
+                    choices=["numpy", "jax", "auto"],
+                    help="epoch-plan engine: numpy reference (default; "
+                         "seed-for-seed reproducible), vectorized jax "
+                         "(repro.core.planner; same distribution, "
+                         "different PRNG), or auto (jax for large client "
+                         "counts)")
     ap.add_argument("--aggregation", default="global_mean")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--d-model", type=int, default=None,
@@ -174,7 +181,8 @@ def main():
     done = 0
     for epoch in range(args.epochs):
         plan = sampling_lib.make_plan(args.method, pop, args.global_batch,
-                                      seed=args.seed + epoch)
+                                      seed=args.seed + epoch,
+                                      backend=args.planner_backend)
         t0 = time.time()
         state, hist = trainer.train_epoch(
             state, data, pop, plan, args.seq_len, seed=args.seed + epoch,

@@ -1,0 +1,19 @@
+"""Documentation stays in sync with the code it references.
+
+Runs the same linter as CI's docs-lint job: every repository path and
+``repro.*`` module mentioned in README.md / docs/*.md must exist.
+"""
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_readme_and_docs_reference_existing_paths():
+    sys.path.insert(0, str(REPO / "tools"))
+    import check_doc_paths
+
+    files = [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+    assert files, "README.md / docs/ missing"
+    problems = check_doc_paths.check([str(f) for f in files])
+    assert not problems, "\n".join(problems)

@@ -14,10 +14,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
 import json, dataclasses
 import jax
 from repro.launch import dryrun
+from repro.launch.mesh import _make_mesh
 from repro.models.config import ShapeConfig
 
-mesh = jax.make_mesh((4, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = _make_mesh((4, 4), ("data", "model"))
 results = {}
 shape_tr = ShapeConfig("train_tiny", 64, 16, "train")
 shape_de = ShapeConfig("decode_tiny", 128, 16, "decode")

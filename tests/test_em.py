@@ -1,7 +1,8 @@
 """EM-MAP estimator: Proposition 1, monotonicity, numpy↔JAX agreement."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from optional_deps import given, settings, st
 
 from repro.core import em as em_lib
 

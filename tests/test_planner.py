@@ -1,0 +1,185 @@
+"""Vectorized JAX planner engine (repro.core.planner).
+
+Three layers of guarantees:
+  * invariance — for both backends and both samplers, every plan is a valid
+    epoch: non-final rows sum to exactly B and every dataset depletes
+    exactly (EpochPlan.validate_against);
+  * statistical equivalence — the jax engine's per-step count distribution
+    matches the literal sequential transcription of Algorithm 1 (the same
+    harness that validates the NumPy chunked sampler against it);
+  * dispatch — make_plan's backend plumbing ("numpy" | "jax" | "auto").
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.core import ClientPopulation, make_plan, planner
+from repro.core.sampling import lds_plan, ugs_plan
+
+
+def _pop(k=8, per=100, m=10, seed=0, skew=False):
+    rng = np.random.default_rng(seed)
+    if skew:
+        sizes = rng.integers(20, 400, size=k)
+        counts = np.zeros((k, m), np.int64)
+        for i in range(k):
+            classes = rng.choice(m, 2, replace=False)
+            split = rng.integers(0, sizes[i] + 1)
+            counts[i, classes[0]] = split
+            counts[i, classes[1]] = sizes[i] - split
+        return ClientPopulation(sizes, counts, np.zeros(k))
+    return ClientPopulation.homogeneous(k, per, m, seed=seed)
+
+
+# ---------------------------------------------------------------- invariance
+
+@pytest.mark.parametrize("method", ["ugs", "lds"])
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+@pytest.mark.parametrize("skew", [False, True])
+def test_plans_valid_both_backends(method, backend, skew):
+    """Rows sum to B (non-final), epochs deplete every dataset exactly."""
+    pop = _pop(k=12, skew=skew, seed=3)
+    plan = make_plan(method, pop, 64, seed=1, backend=backend)
+    plan.validate_against(pop)
+    sums = plan.local_batch_sizes.sum(1)
+    assert np.all(sums[:-1] == 64)
+    assert 0 < sums[-1] <= 64
+    assert np.array_equal(plan.local_batch_sizes.sum(0), pop.dataset_sizes)
+
+
+@pytest.mark.parametrize("reinit", [False, True])
+def test_lds_jax_reinit_modes(reinit):
+    pop = _pop(k=8, skew=True, seed=11)
+    plan = lds_plan(pop, 48, delta=1.0, reinit=reinit, seed=2, backend="jax")
+    plan.validate_against(pop)
+    assert plan.em_iterations >= 1
+    assert len(plan.pi_history) == plan.num_steps + 1
+
+
+def test_ugs_jax_larger_population_smoke():
+    """A bigger-K plan stays valid (one compiled device call)."""
+    rng = np.random.default_rng(0)
+    k = 2048
+    sizes = rng.integers(4, 40, size=k)
+    counts = np.zeros((k, 5), np.int64)
+    counts[np.arange(k), rng.integers(0, 5, k)] = sizes
+    pop = ClientPopulation(sizes, counts, np.zeros(k))
+    plan = ugs_plan(pop, 256, seed=0, backend="jax")
+    plan.validate_against(pop)
+
+
+# ------------------------------------------------- statistical equivalence
+
+def test_ugs_jax_matches_sequential_distribution():
+    """First-step counts: jax engine ≡ Algorithm 1's literal per-draw loop.
+
+    Same harness as test_sampling.test_chunked_matches_sequential_distribution
+    — compare per-client mean and std of the step-1 counts over many
+    independent plans.
+    """
+    from repro.core.sampling import _draw_step_counts_sequential
+
+    pop = _pop(k=4, per=40, seed=11)
+    pi = pop.dataset_sizes / pop.total_size
+    n_trials = 600
+    budget = 30
+    counts_j = np.zeros((n_trials, 4))
+    counts_s = np.zeros((n_trials, 4))
+    for t in range(n_trials):
+        plan = ugs_plan(pop, budget, seed=10_000 + t, backend="jax")
+        counts_j[t] = plan.local_batch_sizes[0]
+        rng = np.random.default_rng(5000 + t)
+        counts_s[t], _ = _draw_step_counts_sequential(rng, budget, pi.copy(),
+                                                      pop.dataset_sizes)
+    assert np.allclose(counts_j.mean(0), counts_s.mean(0), atol=0.5)
+    assert np.allclose(counts_j.std(0), counts_s.std(0), atol=0.5)
+
+
+def test_ugs_jax_full_plan_mean_matches_numpy():
+    """Whole-epoch expectation: elementwise mean plan agrees across
+    backends (the depletion dynamics, not just step 1)."""
+    pop = _pop(k=4, per=30, seed=7)
+    b = 24
+    n_trials = 300
+    acc = {"numpy": 0.0, "jax": 0.0}
+    for t in range(n_trials):
+        for backend in acc:
+            acc[backend] = acc[backend] + ugs_plan(
+                pop, b, seed=3_000 + t, backend=backend).local_batch_sizes
+    mean_np = acc["numpy"] / n_trials
+    mean_j = acc["jax"] / n_trials
+    # per-cell sem ≈ 0.17 at 300 trials; 1.0 is ~6σ — catches any real
+    # slot-level bias while staying robust to the multiple-comparison noise
+    assert np.abs(mean_np - mean_j).max() < 1.0
+
+
+def test_lds_jax_matches_numpy_distribution():
+    """LDS step-1 counts across seeds: backends agree in mean/std (Δ=0,
+    where EM's MAP target is the same size-proportional π for both)."""
+    pop = _pop(k=6, per=60, seed=13)
+    b = 32
+    n_trials = 250
+    rows_np = np.zeros((n_trials, 6))
+    rows_j = np.zeros((n_trials, 6))
+    for t in range(n_trials):
+        rows_np[t] = lds_plan(pop, b, delta=0.0, seed=7_000 + t
+                              ).local_batch_sizes[0]
+        rows_j[t] = lds_plan(pop, b, delta=0.0, seed=7_000 + t,
+                             backend="jax").local_batch_sizes[0]
+    assert np.allclose(rows_np.mean(0), rows_j.mean(0), atol=0.9)
+    assert np.allclose(rows_np.std(0), rows_j.std(0), atol=0.9)
+
+
+def test_lds_jax_delta0_pi_matches_sizes():
+    """Δ=0: the engine's EM lands on π ∝ D_k (same check as the NumPy
+    backend's test_lds_delta0_matches_ugs_proportions)."""
+    pop = _pop(k=8, skew=True, seed=13)
+    plan = lds_plan(pop, 64, delta=0.0, seed=3, backend="jax")
+    pi0 = plan.pi_history[0]
+    expect = pop.dataset_sizes / pop.total_size
+    assert np.abs(pi0 - expect).max() < 0.05
+
+
+def test_lds_jax_straggler_depletion_order():
+    """Higher Δ drains stragglers earlier (paper's straggler mitigation),
+    for the jax engine."""
+    pop = _pop(k=8, per=200, seed=17)
+    pop.delays[:] = 0.0
+    pop.delays[:2] = 500.0
+
+    def depletion_step(plan, k):
+        cum = plan.local_batch_sizes[:, k].cumsum()
+        return int(np.argmax(cum >= pop.dataset_sizes[k]))
+
+    p0 = lds_plan(pop, 64, delta=0.0, seed=5, backend="jax")
+    p2 = lds_plan(pop, 64, delta=2.0, seed=5, backend="jax")
+    d0 = np.mean([depletion_step(p0, k) for k in range(2)])
+    d2 = np.mean([depletion_step(p2, k) for k in range(2)])
+    assert d2 < d0
+
+
+# ------------------------------------------------------------------ dispatch
+
+def test_make_plan_backend_dispatch():
+    pop = _pop(k=6, seed=1)
+    for backend in ("numpy", "jax", "auto"):
+        plan = make_plan("ugs", pop, 32, seed=0, backend=backend)
+        plan.validate_against(pop)
+    with pytest.raises(ValueError):
+        make_plan("ugs", pop, 32, backend="tpu")
+
+
+def test_resolve_backend_auto_threshold():
+    assert planner.resolve_backend("numpy", 10**6) == "numpy"
+    assert planner.resolve_backend("jax", 2) == "jax"
+    assert planner.resolve_backend("auto", 8) == "numpy"
+    assert (planner.resolve_backend("auto",
+                                    planner.AUTO_BACKEND_MIN_CLIENTS)
+            == "jax")
+
+
+def test_sequential_reference_is_numpy_only():
+    pop = _pop(k=4, seed=2)
+    with pytest.raises(ValueError):
+        ugs_plan(pop, 16, sequential=True, backend="jax")

@@ -1,7 +1,8 @@
 """Sampler invariants (Algorithms 1 & 3) + chunked≡sequential equivalence."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from optional_deps import given, settings, st
 
 from repro.core import (ClientPopulation, fls_plan, fpls_plan, lds_plan,
                         make_plan, ugs_plan)

@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from optional_deps import given, settings, st
 
 from repro import optim
 from repro.checkpoint import restore, save, tree_equal

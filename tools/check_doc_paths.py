@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Docs path linter: fail if README/docs reference files that don't exist.
+
+Scans markdown files for repository paths (``src/...py``, ``docs/...md``,
+``benchmarks/...py``, ...) and dotted module references (``repro.core.em``),
+and exits non-zero listing any that do not resolve inside the repository.
+Used by CI and by tests/test_docs.py so documentation cannot drift from the
+code it describes.
+
+Usage: python tools/check_doc_paths.py [file.md ...]
+(default: README.md and docs/*.md)
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# repo-relative file paths like src/repro/core/em.py, docs/sampling.md,
+# .github/workflows/ci.yml — with an extension, no wildcards
+_PATH_RE = re.compile(
+    r"(?<![\w/.])((?:src|tests|benchmarks|examples|docs|tools|\.github)"
+    r"/[\w./-]+\.[\w]+)")
+# dotted module references rooted at the repro package
+_MODULE_RE = re.compile(r"(?<![\w.])(repro(?:\.[a-z_][\w]*)+)")
+
+
+def _module_exists(dotted: str) -> bool:
+    rel = REPO / "src" / pathlib.Path(*dotted.split("."))
+    if rel.with_suffix(".py").exists() or (rel / "__init__.py").exists():
+        return True
+    # trailing attribute (repro.core.em.em_map): accept only when the
+    # parent is a module *file* — a package parent would also bless
+    # single-component typos like repro.core.planers
+    return rel.parent.with_suffix(".py").exists()
+
+
+def check(files) -> list[str]:
+    """Lint the given markdown files; all references resolve against the
+    repository root regardless of the caller's working directory."""
+    problems = []
+    for md in files:
+        text = pathlib.Path(md).read_text()
+        for m in _PATH_RE.finditer(text):
+            path = m.group(1).rstrip(".")
+            if "*" in path:
+                continue
+            if not (REPO / path).exists():
+                problems.append(f"{md}: missing path {path!r}")
+        for m in _MODULE_RE.finditer(text):
+            if not _module_exists(m.group(1)):
+                problems.append(f"{md}: missing module {m.group(1)!r}")
+    return sorted(set(problems))
+
+
+def main(argv) -> int:
+    import os
+    os.chdir(REPO)
+    files = argv[1:] or ["README.md"] + sorted(
+        str(p) for p in pathlib.Path("docs").glob("*.md"))
+    problems = check(files)
+    for p in problems:
+        print(p, file=sys.stderr)
+    if problems:
+        print(f"{len(problems)} dangling documentation reference(s)",
+              file=sys.stderr)
+        return 1
+    print(f"docs path lint OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
