@@ -1,0 +1,195 @@
+#!/usr/bin/env python
+"""Static vs continuous-batching serving throughput → BENCH_serve.json.
+
+Replays the same mixed-length request trace through both engines:
+
+* **static** — launch.serve.BatchedServer: one batch, every request padded
+  to the max prompt length and decoded to the max output length;
+* **continuous** — repro.runtime: fixed decode token budget, slot-pooled KV
+  cache, requests admitted/retired mid-flight.
+
+Each engine gets one untimed warmup pass (compile cache) before the timed
+pass. ``--verify N`` additionally checks that the continuous engine's greedy
+outputs are token-identical to single-request decoding for N requests of the
+largest scenario (all of them with ``--verify -1``).
+
+Usage:
+  PYTHONPATH=src python benchmarks/serve_throughput.py            # full
+  PYTHONPATH=src python benchmarks/serve_throughput.py --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+import jax                                                 # noqa: E402
+
+from repro.configs import get_config                       # noqa: E402
+from repro.launch.serve import BatchedServer, Request      # noqa: E402
+from repro.models import build_model                       # noqa: E402
+from repro.runtime import (ContinuousEngine, Scheduler,    # noqa: E402
+                           ServeRequest, reference_generate)
+
+# Mixed-length workload: short chat-style turns dominate, with a long tail
+# of big completions — the regime where static batching pays max×max for
+# every request while continuous batching pays only what each request uses.
+PROMPT_LENS = [8, 16, 32, 64]
+MAX_NEWS = [4, 8, 16, 128]
+SMOKE_PROMPT_LENS = [4, 8]
+SMOKE_MAX_NEWS = [2, 6]
+
+
+def make_trace(n: int, prompt_lens, max_news, vocab: int, seed: int):
+    rng = np.random.default_rng(seed)
+    trace = []
+    for i in range(n):
+        plen = int(rng.choice(prompt_lens))
+        trace.append((rng.integers(0, vocab, plen).astype(np.int32),
+                      int(rng.choice(max_news))))
+    return trace
+
+
+def run_static(cfg, params, trace, seed: int):
+    server = BatchedServer(cfg, params=params, seed=seed)
+
+    def once():
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=m)
+                for i, (p, m) in enumerate(trace)]
+        t0 = time.perf_counter()
+        out = server.generate(reqs)
+        return time.perf_counter() - t0, out
+
+    once()                                   # warmup (compile cache)
+    # best-of-2 steady-state wall (the common.py jit-measurement convention)
+    wall, out = min((once() for _ in range(2)), key=lambda t: t[0])
+    new_tokens = sum(len(r.generated) for r in out)
+    max_new = max(m for _, m in trace)
+    return {"engine": "static", "arch": cfg.name, "wall_s": round(wall, 4),
+            "num_requests": len(out),
+            "prefill_tokens": len(out) * max(len(p) for p, _ in trace),
+            # first token comes from prefill; every row then rides all
+            # max_new - 1 decode steps whether finished or not
+            "decode_tokens": len(out) * (max_new - 1),
+            "emitted_tokens": new_tokens,
+            "steps": max_new - 1,
+            "requests_per_s": round(len(out) / wall, 2),
+            "decode_tok_per_s": round(new_tokens / wall, 2)}
+
+
+def run_continuous(cfg, params, trace, budget: int, slot_len: int,
+                   seed: int, policy: str = "ljf"):
+    engine = ContinuousEngine(cfg, params=params, num_slots=budget,
+                              slot_len=slot_len, seed=seed)
+    engine.warm(set(len(p) for p, _ in trace))
+
+    def once():
+        engine.reset()
+        sched = Scheduler(engine, token_budget=budget, policy=policy)
+        reqs = [ServeRequest(rid=i, prompt=p, max_new_tokens=m)
+                for i, (p, m) in enumerate(trace)]
+        return sched.run(reqs)
+
+    once()                                   # warmup (compile cache)
+    report = min((once() for _ in range(2)), key=lambda r: r.wall_s)
+    engine.pool.check_no_leaks()
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
+    ap.add_argument("--queued", type=int, nargs="+", default=[8, 64, 256])
+    ap.add_argument("--budget", type=int, default=96,
+                    help="continuous decode token budget (pool slots)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", default="ljf", choices=["fifo", "ljf"],
+                    help="continuous admission order (ljf = longest job "
+                         "first, maximizes tail occupancy)")
+    ap.add_argument("--verify", type=int, default=8,
+                    help="check N continuous outputs against single-request "
+                         "decoding (-1 = all, 0 = skip)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI configuration")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.queued, args.budget = [6], 3
+        prompt_lens, max_news = SMOKE_PROMPT_LENS, SMOKE_MAX_NEWS
+        if args.verify == 8:
+            args.verify = -1
+    else:
+        prompt_lens, max_news = PROMPT_LENS, MAX_NEWS
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    slot_len = max(prompt_lens) + max(max_news)
+
+    scenarios = []
+    for n in args.queued:
+        trace = make_trace(n, prompt_lens, max_news, cfg.vocab_size,
+                           args.seed + n)
+        budget = min(args.budget, n)
+        static = run_static(cfg, params, trace, args.seed)
+        cont = run_continuous(cfg, params, trace, budget, slot_len,
+                              args.seed, policy=args.policy)
+        speedup = (cont.requests_per_s / static["requests_per_s"]
+                   if static["requests_per_s"] else float("inf"))
+        cj = cont.to_json()
+        cj.pop("per_request")
+        cj.pop("step_active", None)
+        scenario = {"queued": n, "budget": budget,
+                    "static": static, "continuous": cj,
+                    "speedup_requests_per_s": round(speedup, 2)}
+
+        if n == max(args.queued) and args.verify:
+            k = len(trace) if args.verify < 0 else min(args.verify,
+                                                       len(trace))
+            mismatches = []
+            by_rid = {r["rid"]: r["tokens"] for r in
+                      cont.per_request}
+            for i in range(k):
+                prompt, max_new = trace[i]
+                want = reference_generate(model, params, prompt, max_new,
+                                          slot_len)
+                if by_rid[i] != want:
+                    mismatches.append(i)
+            scenario["verified_token_identical"] = {
+                "checked": k, "mismatches": mismatches}
+            status = "OK" if not mismatches else f"FAIL {mismatches}"
+            print(f"verify[{n} queued]: {k} requests vs single-request "
+                  f"decode — {status}")
+            if mismatches:
+                raise SystemExit(
+                    f"continuous outputs diverge from single-request "
+                    f"decoding: rids {mismatches}")
+
+        scenarios.append(scenario)
+        print(f"queued={n:4d}  static {static['requests_per_s']:8.2f} req/s"
+              f"  continuous {cont.requests_per_s:8.2f} req/s"
+              f"  speedup {speedup:5.2f}x")
+
+    result = {"bench": "serve_throughput", "arch": cfg.name,
+              "reduced": args.reduced, "seed": args.seed,
+              "policy": args.policy,
+              "workload": {"prompt_lens": prompt_lens,
+                           "max_new_tokens": max_news,
+                           "slot_len": slot_len},
+              "scenarios": scenarios}
+    pathlib.Path(args.out).write_text(json.dumps(result, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,18 @@
-"""Batched split-inference server (the PSL serving analogue).
+"""Split-inference serving driver (the PSL serving analogue).
 
-Requests carry client-generated prompts; the server batches them, runs
-prefill once per batch, then steps the decode loop. The client/server model
-split mirrors training: the client segment's forward runs "on device"
-(edge), the server segment completes the pass — here both execute in one
-process, with the cut kept explicit for transfer accounting.
+Requests carry client-generated prompts; the server completes generation.
+The default engine is the continuous-batching runtime (repro.runtime): a
+global admission controller holds the per-step decode token budget fixed —
+the GPSL invariant applied to serving — while a slot-pooled KV cache recycles
+capacity the moment a request finishes. ``--static`` keeps the original
+static-batch engine for A/B comparison (see benchmarks/serve_throughput.py
+and docs/serving.md).
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --reduced \
-      --requests 8 --prompt-len 32 --max-new 16
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
+      --requests 8 --prompt-len 32 --max-new 16 --budget 8
+  ... --static            # original static-batch engine
+  ... --no-reduced        # full-size architecture
 """
 from __future__ import annotations
 
@@ -24,6 +28,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
+from repro.runtime import ContinuousEngine, Scheduler, ServeRequest
 
 
 @dataclasses.dataclass
@@ -35,7 +40,12 @@ class Request:
 
 
 class BatchedServer:
-    """Static-batch generation engine with greedy decoding."""
+    """Static-batch generation engine with greedy decoding.
+
+    Kept as the A/B baseline for the continuous runtime. Note its batch
+    inflation: every request pays max prompt length and max output length,
+    and nothing is admitted mid-flight.
+    """
 
     def __init__(self, cfg, params=None, seed: int = 0):
         self.cfg = cfg
@@ -52,7 +62,12 @@ class BatchedServer:
         max_new = max(r.max_new_tokens for r in requests)
         cache_len = plen + max_new
         prompts = np.zeros((b, plen), np.int32)
-        for i, r in enumerate(requests):   # left-pad-free: right-aligned
+        for i, r in enumerate(requests):
+            # Static batching LEFT-pads: prompts are right-aligned so every
+            # row decodes at one shared scalar position. Pad-token KV stays
+            # visible to real tokens, so mixed-length static batches are not
+            # token-identical to unpadded decoding; the continuous runtime
+            # avoids padding entirely. Canonical discussion: docs/serving.md.
             prompts[i, plen - len(r.prompt):] = r.prompt
         batch = {"tokens": jnp.asarray(prompts)}
         if cfg.family == "vlm":
@@ -80,29 +95,51 @@ class BatchedServer:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
-    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="smoke-size architecture (--no-reduced for full)")
+    ap.add_argument("--static", action="store_true",
+                    help="use the static-batch engine instead of the "
+                         "continuous runtime")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--budget", type=int, default=8,
+                    help="continuous runtime: per-step decode token budget")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
-    server = BatchedServer(cfg, seed=args.seed)
     rng = np.random.default_rng(args.seed)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab_size,
-                                        args.prompt_len).astype(np.int32),
-                    max_new_tokens=args.max_new)
-            for i in range(args.requests)]
-    t0 = time.time()
-    out = server.generate(reqs)
-    dt = time.time() - t0
-    total_new = sum(len(r.generated) for r in out)
-    print(f"arch={cfg.name} batch={len(out)} new_tokens={total_new} "
-          f"wall={dt:.2f}s ({total_new/dt:.1f} tok/s)")
-    for r in out[:3]:
-        print(f"  req {r.rid}: {r.generated[:12]}...")
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            args.prompt_len).astype(np.int32)
+               for _ in range(args.requests)]
+
+    if args.static:
+        server = BatchedServer(cfg, seed=args.seed)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=args.max_new)
+                for i, p in enumerate(prompts)]
+        t0 = time.time()
+        out = server.generate(reqs)
+        dt = time.time() - t0
+        total_new = sum(len(r.generated) for r in out)
+        print(f"arch={cfg.name} engine=static batch={len(out)} "
+              f"new_tokens={total_new} wall={dt:.2f}s "
+              f"({total_new/dt:.1f} tok/s)")
+        for r in out[:3]:
+            print(f"  req {r.rid}: {r.generated[:12]}...")
+        return
+
+    engine = ContinuousEngine(
+        cfg, num_slots=args.budget,
+        slot_len=args.prompt_len + args.max_new, seed=args.seed)
+    sched = Scheduler(engine, token_budget=args.budget)
+    reqs = [ServeRequest(rid=i, prompt=p, max_new_tokens=args.max_new)
+            for i, p in enumerate(prompts)]
+    report = sched.run(reqs)
+    print(f"arch={cfg.name} " + report.summary())
+    for r in report.per_request[:3]:
+        print(f"  req {r['rid']}: {r['tokens'][:12]}...")
 
 
 if __name__ == "__main__":

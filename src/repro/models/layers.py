@@ -349,9 +349,10 @@ def decode_attention(q, k_cache, v_cache, pos, *,
 
     q: (B, 1, Hq, hd); caches: (B, C, Hc, hd) where Hc divides Hq (cache may
     hold sharding-replicated kv heads). ``pos`` is the absolute position of
-    the new token. For ring caches (C == window) slot validity is
-    min(pos+1, C); ordering inside the ring is irrelevant because keys carry
-    their rotary phase.
+    the new token — a scalar (whole batch at one position) or a (B,) vector
+    (continuous batching: every slot decodes at its own position). For ring
+    caches (C == window) slot validity is min(pos+1, C); ordering inside the
+    ring is irrelevant because keys carry their rotary phase.
     """
     b, _, hq, hd = q.shape
     c, hc = k_cache.shape[1], k_cache.shape[2]
@@ -360,14 +361,14 @@ def decode_attention(q, k_cache, v_cache, pos, *,
     qr = q.reshape(b, 1, hc, rep, hd)
     s = jnp.einsum("bqhrd,bkhd->bqhrk", qr, k_cache,
                    preferred_element_type=jnp.float32) * scale
-    n_valid = jnp.minimum(pos + 1, c)
+    pos = jnp.broadcast_to(jnp.asarray(pos), (b,))
+    n_valid = jnp.minimum(pos + 1, c)                       # (B,)
+    idx = jnp.arange(c)
+    valid = idx[None, :] < n_valid[:, None]                 # (B, C)
     if window is not None and c > window:
         # non-ring cache with a window: mask positions outside it
-        idx = jnp.arange(c)
-        valid = (idx < n_valid) & (idx > pos - window)
-    else:
-        valid = jnp.arange(c) < n_valid
-    s = jnp.where(valid[None, None, None, None, :], s, _NEG_INF)
+        valid &= idx[None, :] > pos[:, None] - window
+    s = jnp.where(valid[:, None, None, None, :], s, _NEG_INF)
     p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
     out = jnp.einsum("bqhrk,bkhd->bqhrd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)

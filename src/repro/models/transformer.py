@@ -188,16 +188,20 @@ class _Blocks:
 
     # ----- decode apply -----
     def attn_block_decode(self, p, x, cache, pos, *, window):
+        """``pos`` may be a scalar (all rows share one position) or a (B,)
+        vector (continuous batching: each cache slot at its own position)."""
         cfg = self.cfg
         b = x.shape[0]
         hn = L.rms_norm(x, p["norm1"], cfg.norm_eps)
-        positions = jnp.broadcast_to(pos, (b, 1))
+        pos = jnp.broadcast_to(jnp.asarray(pos), (b,))
+        positions = pos[:, None]
         q, k, v = L.attention_qkv(p["attn"], hn, cfg, positions)
         kc, vc = cache["k"], cache["v"]
         k_rep, v_rep = self._repeat_kv(k), self._repeat_kv(v)
         slot = pos % kc.shape[1]
-        kc = jax.lax.dynamic_update_slice(kc, k_rep, (0, slot, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vc, v_rep, (0, slot, 0, 0))
+        bidx = jnp.arange(b)
+        kc = kc.at[bidx, slot].set(k_rep[:, 0])
+        vc = vc.at[bidx, slot].set(v_rep[:, 0])
         # Ring cache (cache_len == window): slot-validity masking suffices.
         # Full cache with a window: pass the window so old keys are masked.
         eff_window = (None if (window is not None and kc.shape[1] <= window)
@@ -611,7 +615,8 @@ class LanguageModel:
 
     def decode_step(self, params, cache, tokens, pos,
                     window: Optional[int] = None):
-        """One-token decode. tokens: (B, 1) int32; pos: scalar int32.
+        """One-token decode. tokens: (B, 1) int32; pos: scalar int32, or a
+        (B,) int32 vector of per-slot positions (continuous batching).
 
         Returns (logits (B, 1, V), new_cache)."""
         cfg = self.cfg
@@ -630,17 +635,17 @@ class LanguageModel:
                 lp, attn_c, ssm_c = inp
                 b = xx.shape[0]
                 hn = L.rms_norm(xx, srv["shared_attn"]["norm1"], cfg.norm_eps)
-                positions = jnp.broadcast_to(pos, (b, 1))
+                pos_v = jnp.broadcast_to(jnp.asarray(pos), (b,))
+                positions = pos_v[:, None]
                 q, k, v = L.attention_qkv(srv["shared_attn"]["attn"], hn,
                                           cfg, positions)
                 k_rep = self.blocks._repeat_kv(k)
                 v_rep = self.blocks._repeat_kv(v)
-                slot = pos % attn_c["k"].shape[1]
-                kc = jax.lax.dynamic_update_slice(attn_c["k"], k_rep,
-                                                  (0, slot, 0, 0))
-                vc = jax.lax.dynamic_update_slice(attn_c["v"], v_rep,
-                                                  (0, slot, 0, 0))
-                a_out = L.decode_attention(q, kc, vc, pos, window=None)
+                slot = pos_v % attn_c["k"].shape[1]
+                bidx = jnp.arange(b)
+                kc = attn_c["k"].at[bidx, slot].set(k_rep[:, 0])
+                vc = attn_c["v"].at[bidx, slot].set(v_rep[:, 0])
+                a_out = L.decode_attention(q, kc, vc, pos_v, window=None)
                 xx = xx + a_out.reshape(b, 1, -1) \
                     @ srv["shared_attn"]["attn"]["wo"]
                 xx, new_ssm = self._decode_stack(lp, ssm_c, xx, pos, window)

@@ -1,0 +1,21 @@
+"""Continuous-batching split-serving runtime.
+
+The serving-side analogue of the paper's global sampling: a server-driven
+admission controller holds the per-step decode token budget fixed (the GPSL
+invariant applied to inference), a slot-pooled KV cache lets finished
+requests release capacity instead of padding every request to the global
+max, and a jit-compiled engine decodes all active slots — each at its own
+position — in one device call. See docs/serving.md.
+"""
+from repro.runtime.engine import (ContinuousEngine, ServeReport,
+                                  reference_generate)
+from repro.runtime.kvcache import KVCachePool
+from repro.runtime.queue import (AdmissionController, RequestQueue,
+                                 ServeRequest)
+from repro.runtime.scheduler import (Scheduler, VirtualClock, WallClock,
+                                     straggler_arrivals)
+
+__all__ = ["AdmissionController", "ContinuousEngine", "KVCachePool",
+           "RequestQueue", "Scheduler", "ServeReport", "ServeRequest",
+           "VirtualClock", "WallClock", "reference_generate",
+           "straggler_arrivals"]

@@ -1,0 +1,315 @@
+"""jit-compiled continuous-batching step loop + ServeReport.
+
+One decode step = one device call over the whole slot pool: every slot
+carries its own position (repro.models decode paths accept a (B,) position
+vector) and inactive slots ride along masked — their garbage output is
+discarded host-side and their cache is fully overwritten on the next
+admission, so correctness never depends on slot hygiene. Prefill runs at
+each request's exact prompt length (**no padding** — the canonical padding
+discussion lives in docs/serving.md); same-length admissions share one
+batched prefill call and each row's cache is scattered into its pool slot.
+
+Greedy continuous decoding is token-identical to single-request decoding
+(tests/test_runtime.py): the per-slot valid mask makes every slot's
+attention see exactly the KV a lone request would, and batching changes
+logits only at float-ulp level, orders of magnitude below argmax gaps.
+
+Known scope limits (documented, enforced): the encoder-decoder (audio)
+family keeps a scalar-position decode path and is not served here; MoE
+families route per batch, so capacity dropping can couple slots — exact
+equivalence needs a high ``moe_capacity_factor`` (same caveat as
+tests/test_decode.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+from repro.runtime.kvcache import KVCachePool
+from repro.runtime.queue import ServeRequest
+
+
+def _percentiles(xs: List[float]) -> Dict[str, float]:
+    if not xs:
+        return {"mean": 0.0, "p50": 0.0, "p95": 0.0, "max": 0.0}
+    a = np.asarray(xs, np.float64)
+    return {"mean": float(a.mean()), "p50": float(np.percentile(a, 50)),
+            "p95": float(np.percentile(a, 95)), "max": float(a.max())}
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Per-request latency/TTFT plus aggregate throughput for one run."""
+    engine: str
+    arch: str
+    wall_s: float
+    num_requests: int
+    prefill_tokens: int
+    decode_tokens: int
+    steps: int
+    token_budget: Optional[int]
+    max_active: int
+    step_active: List[int]
+    per_request: List[Dict[str, Any]]
+
+    @property
+    def requests_per_s(self) -> float:
+        return self.num_requests / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        return self.decode_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    def to_json(self) -> Dict[str, Any]:
+        ttft = _percentiles([r["ttft_ms"] for r in self.per_request])
+        lat = _percentiles([r["latency_ms"] for r in self.per_request])
+        return {"engine": self.engine, "arch": self.arch,
+                "wall_s": round(self.wall_s, 4),
+                "num_requests": self.num_requests,
+                "prefill_tokens": self.prefill_tokens,
+                "decode_tokens": self.decode_tokens,
+                "steps": self.steps,
+                "token_budget": self.token_budget,
+                "max_active": self.max_active,
+                "requests_per_s": round(self.requests_per_s, 2),
+                "decode_tok_per_s": round(self.decode_tok_per_s, 2),
+                "ttft_ms": ttft, "latency_ms": lat,
+                "per_request": self.per_request}
+
+    def summary(self) -> str:
+        ttft = _percentiles([r["ttft_ms"] for r in self.per_request])
+        return (f"[{self.engine}] {self.num_requests} requests in "
+                f"{self.wall_s:.2f}s — {self.requests_per_s:.1f} req/s, "
+                f"{self.decode_tok_per_s:.1f} decode tok/s, "
+                f"ttft p50/p95 {ttft['p50']:.1f}/{ttft['p95']:.1f}ms, "
+                f"max_active={self.max_active}"
+                + (f"/{self.token_budget}" if self.token_budget else ""))
+
+
+def _resolve_now(now) -> float:
+    """Timestamps are taken *after* the blocking device sync so WallClock
+    TTFT/latency include the compute that produced the token; pass a
+    callable (e.g. ``clock.now``) to get that, or a float to pin a time."""
+    return now() if callable(now) else now
+
+
+class ContinuousEngine:
+    """Slot-pool decode engine. The scheduler drives admit()/step().
+
+    VLM configs are served **text-only** (the prompt-only prefill never
+    exercises the patches pathway); note the static server instead feeds
+    zero patches that occupy real sequence positions, so static-vs-
+    continuous outputs are not comparable for vlm archs."""
+
+    def __init__(self, cfg, params=None, *, num_slots: int,
+                 slot_len: int, seed: int = 0):
+        if cfg.family == "audio":
+            raise NotImplementedError(
+                "the encoder-decoder family decodes with a scalar position "
+                "(learned absolute embeddings) and is not served by the "
+                "continuous runtime; use the static server")
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = (params if params is not None
+                       else self.model.init(jax.random.PRNGKey(seed)))
+        self.pool = KVCachePool(self.model, num_slots, slot_len)
+
+        def _step(params, cache, tokens, pos):
+            # fused decode + greedy pick: one dispatch, no logits transfer
+            logits, new_cache = self.model.decode_step(params, cache,
+                                                       tokens, pos)
+            return (jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32),
+                    new_cache)
+
+        self._decode = jax.jit(_step, donate_argnums=(1,))
+        self._prefill = jax.jit(functools.partial(self.model.prefill,
+                                                  cache_len=slot_len))
+        p = self.pool.num_slots
+        self._rid = np.full(p, -1, np.int64)       # -1 = slot idle
+        self._tok = np.zeros(p, np.int32)          # last emitted token
+        self._remaining = np.zeros(p, np.int64)    # tokens still to emit
+        self.records: Dict[int, Dict[str, Any]] = {}
+        self.steps = 0
+        self.decode_tokens = 0
+        self.prefill_tokens = 0
+
+    def reset(self) -> None:
+        """Forget all requests/stats but keep params and compiled fns.
+
+        Lets a benchmark reuse one engine for warmup + timed runs so the
+        timed pass measures steady-state serving, not retracing.
+        """
+        self.pool.reset()
+        self._rid[:] = -1
+        self._tok[:] = 0
+        self._remaining[:] = 0
+        self.records = {}
+        self.steps = self.decode_tokens = self.prefill_tokens = 0
+
+    # ----- capacity -----
+    def num_active(self) -> int:
+        return int((self._rid >= 0).sum())
+
+    def has_capacity(self) -> bool:
+        return self.pool.num_free > 0
+
+    # ----- admission (prefill) -----
+    def admit(self, req: ServeRequest, now) -> None:
+        self.admit_batch([req], now)
+
+    def admit_batch(self, reqs: List[ServeRequest], now) -> None:
+        """Prefill ``reqs`` at exact prompt lengths and occupy slots.
+
+        Same-length requests share one prefill call, chunked to the fixed
+        ``_GROUP_SIZES`` so the set of compiled prefill shapes stays small
+        (group × distinct length). The prompt's last-position logits yield
+        each request's first generated token, so TTFT is the admit time. A
+        max_new_tokens == 1 request completes here and never consumes a
+        slot or decode budget.
+        """
+        by_len: Dict[int, List[ServeRequest]] = {}
+        for req in reqs:
+            plen = int(req.prompt.shape[0])
+            if plen + req.max_new_tokens > self.pool.slot_len:
+                raise ValueError(
+                    f"request {req.rid}: prompt {plen} + max_new "
+                    f"{req.max_new_tokens} exceeds slot capacity "
+                    f"{self.pool.slot_len}")
+            by_len.setdefault(plen, []).append(req)
+        for plen, group in by_len.items():
+            i = 0
+            while i < len(group):
+                g = next(s for s in self._GROUP_SIZES
+                         if s <= len(group) - i)
+                self._admit_chunk(group[i:i + g], plen, now)
+                i += g
+
+    _GROUP_SIZES = (16, 4, 1)
+
+    def _admit_chunk(self, chunk: List[ServeRequest], plen: int,
+                     now) -> None:
+        tokens = jnp.asarray(np.stack([r.prompt for r in chunk]))
+        logits, cache, _ = self._prefill(self.params, {"tokens": tokens})
+        firsts = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        t = _resolve_now(now)          # after the sync: TTFT covers prefill
+        self.prefill_tokens += plen * len(chunk)
+        for row, req in enumerate(chunk):
+            first = int(firsts[row])
+            rec = {"rid": req.rid, "prompt_len": plen,
+                   "max_new_tokens": req.max_new_tokens,
+                   "arrival_s": req.arrival_s, "admit_s": t,
+                   "first_token_s": t, "done_s": None,
+                   "tokens": [first]}
+            self.records[req.rid] = rec
+            if req.max_new_tokens == 1:
+                rec["done_s"] = t
+                continue
+            slot = self.pool.alloc()
+            if slot is None:
+                raise RuntimeError("admit() called with no free slot")
+            self.pool.insert(cache, slot, plen, row=row)
+            self._rid[slot] = req.rid
+            self._tok[slot] = first
+            self._remaining[slot] = req.max_new_tokens - 1
+
+    def warm(self, prompt_lens) -> None:
+        """Pre-compile every reachable (group size, prompt length) admission
+        shape so a timed run never hits a mid-flight retrace. Group sizes
+        beyond the pool can never be admitted, so they are skipped."""
+        for plen in sorted(set(int(p) for p in prompt_lens)):
+            for g in self._GROUP_SIZES:
+                if g <= self.pool.num_slots:
+                    self._prefill(self.params,
+                                  {"tokens": jnp.zeros((g, plen),
+                                                       jnp.int32)})
+
+    # ----- decode -----
+    def step(self, now) -> List[int]:
+        """One decode step over the pool; returns rids finished this step.
+        ``now``: a float timestamp or a callable read after the device sync.
+
+        Inactive slots decode token 0 at position 0 — pure masked padding
+        whose output is dropped and whose cache is rewritten on insert.
+        """
+        active = self._rid >= 0
+        n_active = int(active.sum())
+        if n_active == 0:
+            return []
+        tokens = jnp.asarray(np.where(active, self._tok, 0)[:, None])
+        pos = jnp.asarray(np.where(active, self.pool.pos, 0).astype(np.int32))
+        nxt, new_cache = self._decode(self.params, self.pool.buffers,
+                                      tokens, pos)
+        self.pool.swap(new_cache)
+        nxt = np.asarray(nxt)
+        t = _resolve_now(now)        # after the sync: latency covers decode
+        self.steps += 1
+        self.decode_tokens += n_active
+        finished: List[int] = []
+        for slot in np.flatnonzero(active):
+            rid = int(self._rid[slot])
+            self.records[rid]["tokens"].append(int(nxt[slot]))
+            self._tok[slot] = nxt[slot]
+            self.pool.pos[slot] += 1
+            self._remaining[slot] -= 1
+            if self._remaining[slot] == 0:
+                self.records[rid]["done_s"] = t
+                self._rid[slot] = -1
+                self.pool.release(int(slot))
+                finished.append(rid)
+        return finished
+
+    # ----- reporting -----
+    def build_report(self, engine_name: str, wall_s: float,
+                     token_budget: Optional[int],
+                     step_active: List[int]) -> ServeReport:
+        per_request = []
+        for rid in sorted(self.records):
+            r = self.records[rid]
+            per_request.append({
+                "rid": rid, "prompt_len": r["prompt_len"],
+                "new_tokens": len(r["tokens"]),
+                "arrival_s": round(r["arrival_s"], 6),
+                "ttft_ms": (r["first_token_s"] - r["arrival_s"]) * 1e3,
+                "latency_ms": (r["done_s"] - r["arrival_s"]) * 1e3,
+                "tokens": r["tokens"]})
+        return ServeReport(
+            engine=engine_name, arch=self.cfg.name, wall_s=wall_s,
+            num_requests=len(per_request),
+            prefill_tokens=self.prefill_tokens,
+            decode_tokens=self.decode_tokens, steps=self.steps,
+            token_budget=token_budget,
+            max_active=max(step_active, default=0),
+            step_active=step_active, per_request=per_request)
+
+
+@functools.lru_cache(maxsize=32)
+def _reference_fns(model, cache_len: int):
+    return (jax.jit(functools.partial(model.prefill, cache_len=cache_len)),
+            jax.jit(model.decode_step, donate_argnums=(1,)))
+
+
+def reference_generate(model, params, prompt: np.ndarray,
+                       max_new_tokens: int, cache_len: int) -> List[int]:
+    """Single-request greedy decoding — the runtime's ground truth.
+
+    Exact-length batch-1 prefill followed by one decode step per token, the
+    same code path a continuous slot takes, with nothing else in the batch.
+    """
+    prefill, decode = _reference_fns(model, cache_len)
+    logits, cache, pos = prefill(params,
+                                 {"tokens": jnp.asarray(prompt[None])})
+    toks = [int(jnp.argmax(logits[0]))]
+    posv = jnp.asarray([int(pos)], jnp.int32)
+    tok = jnp.asarray([[toks[-1]]], jnp.int32)
+    for _ in range(max_new_tokens - 1):
+        logits, cache = decode(params, cache, tok, posv)
+        posv = posv + 1
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        toks.append(int(tok[0, 0]))
+    return toks

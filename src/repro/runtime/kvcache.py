@@ -1,0 +1,133 @@
+"""Pooled, slot-allocated KV cache for continuous batching.
+
+The static server sizes one cache for the whole batch — every request pays
+for max prompt length + max output length until the *last* request finishes.
+The pool replaces that with ``num_slots`` fixed-capacity slots: a request is
+prefilled at its exact prompt length (batch 1, no padding), its cache is
+scattered into a free slot, and the slot returns to the free list the moment
+the request completes. Per-slot position tracking lives host-side (the
+engine feeds a (num_slots,) position vector into decode), so slots at
+different depths coexist in one decode batch.
+
+The pool is model-agnostic: slot placement uses the logical ``"batch"`` axis
+recorded in the model's cache ParamSpec tree, so attention KV rings, SSM
+states, and the hybrid double-stacked trees are all handled by one jitted
+donated scatter (no per-family code).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import numpy as np
+
+
+def _batch_axes(spec_tree) -> List[int]:
+    """Per-leaf index of the logical slot ("batch") axis."""
+    axes = []
+    for spec in jax.tree_util.tree_leaves(spec_tree):
+        if "batch" not in spec.axes:
+            raise ValueError(f"cache spec without a batch axis: {spec}")
+        axes.append(spec.axes.index("batch"))
+    return axes
+
+
+class KVCachePool:
+    """Fixed pool of decode-cache slots with free-list reuse.
+
+    ``buffers`` is the model's cache pytree with the batch dimension equal to
+    ``num_slots``. ``insert`` scatters a freshly prefilled batch-1 cache into
+    a slot (donated, in place on the device); ``alloc``/``release`` manage
+    the free list. ``pos[slot]`` is the next absolute decode position of the
+    slot's request (prompt length right after insert).
+    """
+
+    def __init__(self, model, num_slots: int, slot_len: int,
+                 window: Optional[int] = None):
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        self.num_slots = int(num_slots)
+        self.slot_len = int(slot_len)
+        specs = model.cache_specs(self.num_slots, self.slot_len, window)
+        self._axes = _batch_axes(specs)
+        self.buffers = model.init_cache(self.num_slots, self.slot_len,
+                                        window)
+        self.pos = np.zeros(self.num_slots, np.int32)
+        # LIFO free list: reuse the hottest slot first.
+        self._free = list(range(self.num_slots - 1, -1, -1))
+        self._live: set = set()
+        self.alloc_count = 0
+        self.release_count = 0
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+
+    # ----- slot lifecycle -----
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_live(self) -> int:
+        return len(self._live)
+
+    def alloc(self) -> Optional[int]:
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._live.add(slot)
+        self.alloc_count += 1
+        return slot
+
+    def release(self, slot: int) -> None:
+        if slot not in self._live:
+            raise ValueError(f"releasing slot {slot} that is not live")
+        self._live.remove(slot)
+        self._free.append(slot)
+        self.release_count += 1
+        self.pos[slot] = 0
+
+    def check_no_leaks(self) -> None:
+        """Every slot is exactly one of free/live, and counts balance."""
+        if self.num_free + self.num_live != self.num_slots:
+            raise RuntimeError(
+                f"slot leak: {self.num_free} free + {self.num_live} live "
+                f"!= {self.num_slots} slots")
+        if set(self._free) & self._live:
+            raise RuntimeError("slot both free and live")
+        if self.alloc_count - self.release_count != self.num_live:
+            raise RuntimeError("alloc/release counters out of balance")
+
+    # ----- device-side placement -----
+    def _insert_impl(self, buffers, src_cache, row, slot):
+        leaves, treedef = jax.tree_util.tree_flatten(buffers)
+        srcs = jax.tree_util.tree_leaves(src_cache)
+        out = [jax.lax.dynamic_update_slice_in_dim(
+                   leaf, jax.lax.dynamic_slice_in_dim(src, row, 1, axis),
+                   slot, axis)
+               for leaf, src, axis in zip(leaves, srcs, self._axes)]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def insert(self, src_cache: Any, slot: int, length: int,
+               row: int = 0) -> None:
+        """Scatter row ``row`` of a prefilled cache into ``slot`` (donated).
+
+        ``src_cache`` may come from a batched prefill (grouped admission);
+        the default ``row=0`` covers the batch-1 case.
+        """
+        if slot not in self._live:
+            raise ValueError(f"insert into slot {slot} that is not live")
+        if length > self.slot_len:
+            raise ValueError(f"prefill length {length} exceeds slot "
+                             f"capacity {self.slot_len}")
+        self.buffers = self._insert(self.buffers, src_cache,
+                                    np.int32(row), np.int32(slot))
+        self.pos[slot] = length
+
+    def swap(self, new_buffers: Any) -> None:
+        """Adopt the cache pytree returned by a donated decode step."""
+        self.buffers = new_buffers
+
+    def reset(self) -> None:
+        """Zero the bookkeeping (buffers are overwritten on insert)."""
+        self._free = list(range(self.num_slots - 1, -1, -1))
+        self._live = set()
+        self.pos[:] = 0

@@ -1,0 +1,110 @@
+"""Request queue + global admission control (the GPSL invariant, served).
+
+On the training side the paper's server fixes the *effective global batch*:
+every optimization step consumes exactly B samples, however many clients are
+connected and however late the stragglers run (PAPER.md, Sec. III/V-B). The
+serving analogue implemented here fixes the *per-step decode token budget*:
+the admission controller grants a request a slot only while
+
+    active_slots × 1 token/step  ≤  token_budget
+
+so the cost of a decode step is decided by the server, never by queue depth.
+A thousand waiting clients change queueing delay, not step time — exactly
+how GPSL decouples batch size from client count. Finished requests release
+their slot (see repro.runtime.kvcache) and the freed budget is re-granted to
+the queue head, which is what turns the static batch into a continuous one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One client generation request.
+
+    ``arrival_s`` is the time (seconds, scheduler clock) at which the prompt
+    becomes visible to the server — straggler clients arrive late (their
+    delays come from repro.core.straggler.assign_delays).
+    """
+    rid: int
+    prompt: np.ndarray            # (S,) int32 token ids, unpadded
+    max_new_tokens: int
+    arrival_s: float = 0.0
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32)
+        if self.prompt.ndim != 1 or self.prompt.size == 0:
+            raise ValueError("prompt must be a non-empty 1-D token array")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+
+class RequestQueue:
+    """Arrival-ordered pending-request queue.
+
+    ``poll(now)`` pops every request whose ``arrival_s <= now`` in arrival
+    order; ``next_arrival()`` tells an idle scheduler how long it may sleep
+    without missing anyone. Ties break by submission order.
+    """
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = itertools.count()
+
+    def push(self, req: ServeRequest) -> None:
+        heapq.heappush(self._heap, (req.arrival_s, next(self._seq), req))
+
+    def poll(self, now: float) -> List[ServeRequest]:
+        out = []
+        while self._heap and self._heap[0][0] <= now:
+            out.append(heapq.heappop(self._heap)[2])
+        return out
+
+    def next_arrival(self) -> Optional[float]:
+        return self._heap[0][0] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+
+class AdmissionController:
+    """Holds the per-step decode token budget fixed at ``token_budget``.
+
+    Pure bookkeeping — the scheduler asks ``grants(active)`` before admitting
+    and reports every decode step through ``note_step(active)`` so the
+    invariant (active ≤ budget at every step) is auditable after the fact via
+    ``step_active``/``max_active``.
+    """
+
+    def __init__(self, token_budget: int):
+        if token_budget < 1:
+            raise ValueError("token_budget must be >= 1")
+        self.token_budget = int(token_budget)
+        self.admitted = 0
+        self.step_active: List[int] = []
+        self.max_active = 0
+
+    def grants(self, active_tokens: int) -> int:
+        """How many new requests may be admitted right now."""
+        return max(0, self.token_budget - int(active_tokens))
+
+    def note_admit(self, n: int = 1) -> None:
+        self.admitted += n
+
+    def note_step(self, active_tokens: int) -> None:
+        active_tokens = int(active_tokens)
+        if active_tokens > self.token_budget:
+            raise RuntimeError(
+                f"admission invariant violated: {active_tokens} active "
+                f"decode tokens > budget {self.token_budget}")
+        self.step_active.append(active_tokens)
+        self.max_active = max(self.max_active, active_tokens)

@@ -1,0 +1,159 @@
+"""Interleaved prefill/decode scheduling with straggler-aware arrivals.
+
+The loop alternates admission (prefill into freed slots, up to the token
+budget; ``policy="fifo"`` admits by arrival, ``"ljf"`` longest-job-first
+for tail occupancy) with decode steps over the pool. Straggler handling mirrors the
+paper's serving lesson: a decode step **never waits** for a request that has
+not arrived — the deadline for joining a step is "be in the queue when the
+step starts". Late prompts (delays drawn from
+repro.core.straggler.assign_delays, the same module the training simulator
+uses) therefore cost only their own TTFT, not everyone else's step time; the
+static server by contrast cannot start until its whole batch is assembled.
+
+Clocks are pluggable: ``WallClock`` serves real time (idle waits sleep until
+the next arrival); ``VirtualClock`` advances a deterministic tick per engine
+operation so tests can replay randomized arrival/completion traces instantly.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.straggler import assign_delays
+from repro.runtime.engine import ContinuousEngine, ServeReport
+from repro.runtime.queue import (AdmissionController, RequestQueue,
+                                 ServeRequest)
+
+
+def straggler_arrivals(num_requests: int, p_straggler: float = 0.2,
+                       w_min: float = 50.0, w_max: float = 500.0,
+                       seed: int = 0, time_scale: float = 1e-3) -> np.ndarray:
+    """Arrival times (s) for a request trace with straggling edge clients.
+
+    Reuses the training-side delay model (repro.core.straggler.assign_delays,
+    paper Sec. V-B): each client straggles with probability ``p_straggler``
+    and its prompt arrives ``U[w_min, w_max]`` ms late; ``time_scale``
+    converts ms of model time into scheduler seconds.
+    """
+    delays_ms = assign_delays(num_requests, p_straggler, w_min, w_max,
+                              seed=seed)
+    return delays_ms * time_scale
+
+
+class WallClock:
+    """Real time, relative to construction; idle waits actually sleep."""
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def wait_until(self, t: float) -> None:
+        dt = t - self.now()
+        if dt > 0:
+            time.sleep(dt)
+
+    def advance(self) -> None:     # real time advances itself
+        pass
+
+
+class VirtualClock:
+    """Deterministic simulated time: one fixed tick per engine operation."""
+
+    def __init__(self, tick_s: float = 1e-3):
+        self.tick_s = tick_s
+        self._t = 0.0
+
+    def now(self) -> float:
+        return self._t
+
+    def wait_until(self, t: float) -> None:
+        self._t = max(self._t, t)
+
+    def advance(self) -> None:
+        self._t += self.tick_s
+
+
+class Scheduler:
+    """Drives a ContinuousEngine from a RequestQueue under a fixed budget."""
+
+    def __init__(self, engine: ContinuousEngine,
+                 token_budget: Optional[int] = None, clock=None,
+                 max_admits_per_step: Optional[int] = None,
+                 policy: str = "fifo"):
+        if policy not in ("fifo", "ljf"):
+            raise ValueError(f"unknown admission policy {policy!r}")
+        self.policy = policy
+        self.engine = engine
+        budget = (token_budget if token_budget is not None
+                  else engine.pool.num_slots)
+        if budget > engine.pool.num_slots:
+            raise ValueError(
+                f"token budget {budget} exceeds pool capacity "
+                f"{engine.pool.num_slots}: budgeted slots must exist")
+        self.admission = AdmissionController(budget)
+        self.queue = RequestQueue()
+        self.clock = clock if clock is not None else WallClock()
+        if max_admits_per_step is not None and max_admits_per_step < 1:
+            raise ValueError("max_admits_per_step must be >= 1 (or None)")
+        self.max_admits_per_step = max_admits_per_step
+
+    def submit(self, requests: Sequence[ServeRequest]) -> None:
+        for r in requests:
+            self.queue.push(r)
+
+    def run(self, requests: Optional[Sequence[ServeRequest]] = None
+            ) -> ServeReport:
+        """Serve until the queue drains and every slot retires."""
+        if requests is not None:
+            self.submit(requests)
+        eng, adm, clock = self.engine, self.admission, self.clock
+        ready: List[ServeRequest] = []
+        wall0 = time.perf_counter()
+        while True:
+            arrived = self.queue.poll(clock.now())
+            if arrived:
+                ready.extend(arrived)
+                if self.policy == "ljf":
+                    # longest-job-first keeps tail occupancy high: big
+                    # completions start early and short ones backfill, so
+                    # makespan tracks the longest request, not FIFO luck.
+                    ready.sort(key=lambda r: -r.max_new_tokens)
+            # Admission: grant freed budget to the ready head (FIFO: oldest
+            # first); same-length requests in a grant share a prefill call.
+            admits = adm.grants(eng.num_active())
+            if self.max_admits_per_step is not None:
+                admits = min(admits, self.max_admits_per_step)
+            take = min(admits, len(ready), eng.pool.num_free)
+            if take > 0:
+                # clock.now passed as a callable: the engine stamps TTFT
+                # after the prefill sync, so it includes the compute.
+                eng.admit_batch(ready[:take], clock.now)
+                del ready[:take]
+                adm.note_admit(take)
+                clock.advance()
+            if eng.num_active() > 0:
+                adm.note_step(eng.num_active())
+                eng.step(clock.now)
+                clock.advance()
+            elif ready:
+                # budget exhausted with an empty pool cannot happen
+                # (budget ≥ 1); loop back to admit.
+                continue
+            elif self.queue:
+                # idle until the next straggler's prompt arrives — waiting
+                # costs nothing because no admitted request is stalled.
+                self.queue_wait()
+            else:
+                break
+        wall = time.perf_counter() - wall0
+        return eng.build_report("continuous", wall, adm.token_budget,
+                                adm.step_active)
+
+    def queue_wait(self) -> None:
+        nxt = self.queue.next_arrival()
+        if nxt is not None:
+            self.clock.wait_until(nxt)

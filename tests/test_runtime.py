@@ -1,0 +1,199 @@
+"""Continuous-batching runtime: decode equivalence, admission invariant,
+slot-pool hygiene, queue/controller bookkeeping (docs/serving.md)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.runtime import (AdmissionController, ContinuousEngine,
+                           KVCachePool, RequestQueue, Scheduler,
+                           ServeRequest, VirtualClock, reference_generate,
+                           straggler_arrivals)
+
+SLOT_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("granite-3-2b", reduced=True)
+    engine = ContinuousEngine(cfg, num_slots=3, slot_len=SLOT_LEN, seed=0)
+    return cfg, engine
+
+
+def _mixed_trace(cfg, n, rng, max_prompt=20, max_new=9):
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(4, max_prompt + 1))
+        reqs.append(ServeRequest(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                       plen).astype(np.int32),
+            max_new_tokens=int(rng.integers(1, max_new + 1))))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# decode equivalence: continuous greedy == single-request greedy, per token
+# ---------------------------------------------------------------------------
+
+def test_continuous_matches_single_request(served):
+    """Every request in a mixed-length continuous batch decodes the exact
+    token sequence it would decode alone (slots share steps, not state)."""
+    cfg, engine = served
+    engine.reset()
+    rng = np.random.default_rng(0)
+    reqs = _mixed_trace(cfg, 7, rng)
+    report = Scheduler(engine, clock=VirtualClock()).run(reqs)
+    got = {r["rid"]: r["tokens"] for r in report.per_request}
+    assert set(got) == {r.rid for r in reqs}
+    for req in reqs:
+        want = reference_generate(engine.model, engine.params, req.prompt,
+                                  req.max_new_tokens, SLOT_LEN)
+        assert got[req.rid] == want, f"request {req.rid} diverged"
+        assert len(got[req.rid]) == req.max_new_tokens
+
+
+def test_ljf_policy_is_still_token_identical(served):
+    cfg, engine = served
+    engine.reset()
+    rng = np.random.default_rng(3)
+    reqs = _mixed_trace(cfg, 5, rng)
+    report = Scheduler(engine, clock=VirtualClock(), policy="ljf").run(reqs)
+    got = {r["rid"]: r["tokens"] for r in report.per_request}
+    for req in reqs:
+        assert got[req.rid] == reference_generate(
+            engine.model, engine.params, req.prompt, req.max_new_tokens,
+            SLOT_LEN)
+
+
+# ---------------------------------------------------------------------------
+# admission invariant + pool hygiene over a randomized trace
+# ---------------------------------------------------------------------------
+
+def test_admission_invariant_and_no_slot_leak(served):
+    """Across random arrivals/lengths/completions: active decode tokens
+    never exceed the budget at any step, and the pool leaks no slots."""
+    cfg, engine = served
+    engine.reset()
+    rng = np.random.default_rng(1)
+    reqs = _mixed_trace(cfg, 23, rng)
+    arrivals = straggler_arrivals(len(reqs), p_straggler=0.4, w_min=1.0,
+                                  w_max=30.0, seed=7, time_scale=1e-3)
+    for r, t in zip(reqs, arrivals):
+        r.arrival_s = float(t)
+    sched = Scheduler(engine, token_budget=3, clock=VirtualClock())
+    report = sched.run(reqs)
+
+    assert report.num_requests == len(reqs)
+    assert report.step_active, "no decode steps recorded"
+    assert max(report.step_active) <= 3
+    assert report.max_active <= 3
+    engine.pool.check_no_leaks()
+    assert engine.pool.num_live == 0
+    assert engine.pool.num_free == engine.pool.num_slots
+    assert engine.pool.alloc_count == engine.pool.release_count
+    assert len(sched.queue) == 0
+    for r in report.per_request:
+        assert r["new_tokens"] == reqs[r["rid"]].max_new_tokens
+        # a straggler's lateness delays itself, not the others
+        assert r["ttft_ms"] >= 0.0
+        assert r["latency_ms"] >= r["ttft_ms"]
+
+
+def test_budget_cannot_exceed_pool():
+    cfg = get_config("granite-3-2b", reduced=True)
+    engine = ContinuousEngine(cfg, num_slots=2, slot_len=16, seed=0)
+    with pytest.raises(ValueError, match="exceeds pool capacity"):
+        Scheduler(engine, token_budget=5)
+
+
+def test_oversized_request_rejected(served):
+    cfg, engine = served
+    engine.reset()
+    req = ServeRequest(rid=0,
+                       prompt=np.zeros(SLOT_LEN, np.int32),
+                       max_new_tokens=4)
+    with pytest.raises(ValueError, match="slot capacity"):
+        engine.admit(req, now=0.0)
+
+
+# ---------------------------------------------------------------------------
+# queue / controller / pool bookkeeping (no model involved)
+# ---------------------------------------------------------------------------
+
+def test_queue_polls_in_arrival_order():
+    q = RequestQueue()
+    for rid, t in [(0, 0.5), (1, 0.0), (2, 0.2), (3, 0.9)]:
+        q.push(ServeRequest(rid=rid, prompt=np.ones(2, np.int32),
+                            max_new_tokens=1, arrival_s=t))
+    assert q.next_arrival() == 0.0
+    assert [r.rid for r in q.poll(0.3)] == [1, 2]
+    assert len(q) == 2
+    assert [r.rid for r in q.poll(10.0)] == [0, 3]
+    assert not q
+
+
+def test_admission_controller_grants_and_audits():
+    adm = AdmissionController(4)
+    assert adm.grants(0) == 4
+    assert adm.grants(3) == 1
+    assert adm.grants(9) == 0
+    adm.note_step(4)
+    with pytest.raises(RuntimeError, match="admission invariant"):
+        adm.note_step(5)
+    with pytest.raises(ValueError):
+        AdmissionController(0)
+
+
+def test_kvcache_pool_alloc_release_discipline(served):
+    _, engine = served
+    pool = KVCachePool(engine.model, num_slots=2, slot_len=8)
+    a, b = pool.alloc(), pool.alloc()
+    assert {a, b} == {0, 1}
+    assert pool.alloc() is None           # exhausted, not an error
+    pool.release(a)
+    with pytest.raises(ValueError, match="not live"):
+        pool.release(a)                   # double free
+    assert pool.alloc() == a              # LIFO reuse
+    pool.release(a)
+    pool.release(b)
+    pool.check_no_leaks()
+
+
+def test_report_json_roundtrip(served):
+    cfg, engine = served
+    engine.reset()
+    rng = np.random.default_rng(2)
+    report = Scheduler(engine, clock=VirtualClock()).run(
+        _mixed_trace(cfg, 3, rng))
+    j = report.to_json()
+    assert j["engine"] == "continuous"
+    assert j["num_requests"] == 3
+    assert j["decode_tokens"] == report.decode_tokens
+    assert j["ttft_ms"]["p95"] >= j["ttft_ms"]["p50"] >= 0
+    assert len(j["per_request"]) == 3
+
+
+# ---------------------------------------------------------------------------
+# family coverage: the SSM decode path serves continuously too
+# ---------------------------------------------------------------------------
+
+def test_ssm_continuous_matches_single_request():
+    cfg = get_config("falcon-mamba-7b", reduced=True)
+    engine = ContinuousEngine(cfg, num_slots=2, slot_len=24, seed=0)
+    rng = np.random.default_rng(5)
+    reqs = []
+    for i, (plen, mnew) in enumerate([(5, 4), (9, 6), (7, 3)]):
+        reqs.append(ServeRequest(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                       plen).astype(np.int32),
+            max_new_tokens=mnew))
+    report = Scheduler(engine, clock=VirtualClock()).run(reqs)
+    got = {r["rid"]: r["tokens"] for r in report.per_request}
+    for req in reqs:
+        assert got[req.rid] == reference_generate(
+            engine.model, engine.params, req.prompt, req.max_new_tokens, 24)
+
+
+def test_audio_family_not_served():
+    cfg = get_config("whisper-tiny", reduced=True)
+    with pytest.raises(NotImplementedError, match="static server"):
+        ContinuousEngine(cfg, num_slots=1, slot_len=8)
