@@ -1,0 +1,162 @@
+#!/usr/bin/env python
+"""Host-mesh scaling sweep of the sharded PSL training step → BENCH_train.json.
+
+For each mesh width D in the sweep, a child process (this script with
+``--child``, forcing ``XLA_FLAGS=--xla_force_host_platform_device_count=D``
+before importing jax — the device count locks at first init) runs the fused
+PSL step through ``repro.launch.distributed.ShardedPSLEngine`` on a D×1
+mesh: planner schedule → sharded batch gathers → donated train step. Each
+configuration is timed as best-of-N passes over the same step sequence
+after an untimed compile pass (the repo's jit-measurement convention; the
+engine instance is reused so the timed pass hits the compile cache).
+
+All D host "devices" share this container's CPU, so wall times measure the
+*overhead* of the sharded lowering (partitioning, collectives, per-shard
+dispatch) relative to D=1 — not hardware speedup. The point of the sweep is
+that the overhead stays bounded as the mesh widens while the per-device
+batch shrinks; on a real pod the same program text runs one shard per chip.
+
+Usage:
+  PYTHONPATH=src python benchmarks/train_scaling.py            # 1/2/4/8-way
+  PYTHONPATH=src python benchmarks/train_scaling.py --smoke    # CI (1/2-way)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def child_main(args) -> None:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={args.ways}")
+    import numpy as np
+    import jax
+
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro import optim
+    from repro.core import ClientPopulation, make_plan
+    from repro.core.psl import slot_weights
+    from repro.launch.distributed import ShardedPSLEngine
+    from repro.launch.mesh import make_training_mesh
+    from repro.models.cnn import CNNConfig, CNNModel
+
+    cfg = CNNConfig(channels=(16, 32, 64), image_size=32)
+    model = CNNModel(cfg)
+    engine = ShardedPSLEngine(model, optim.sgd(5e-2, momentum=0.9),
+                              mesh=make_training_mesh(f"{args.ways}x1"),
+                              lowering=args.lowering,
+                              microbatches=args.microbatches)
+
+    pop = ClientPopulation.homogeneous(args.clients,
+                                       args.steps * args.global_batch
+                                       // args.clients + 1,
+                                       10, seed=0)
+    plan = make_plan("ugs", pop, args.global_batch, seed=0)
+    rng = np.random.default_rng(0)
+    batches = []
+    for t in range(args.steps):
+        sizes = plan.local_batch_sizes[t]
+        cids = np.repeat(np.arange(args.clients), sizes)
+        b = args.global_batch
+        cids = np.concatenate([cids, np.full(b - len(cids), -1)])[:b]
+        batches.append({
+            "images": rng.normal(size=(b, cfg.image_size, cfg.image_size, 3)
+                                 ).astype(np.float32),
+            "labels": rng.integers(0, 10, b).astype(np.int32),
+            "weights": slot_weights(cids, sizes, pop.dataset_sizes,
+                                    "global_mean"),
+        })
+
+    def one_pass():
+        state = engine.init_state(0)
+        t0 = time.perf_counter()
+        for hb in batches:
+            state, metrics = engine.step(state, engine.put_batch(hb))
+        jax.block_until_ready(state.params)
+        return time.perf_counter() - t0
+
+    one_pass()                                    # untimed compile pass
+    wall = min(one_pass() for _ in range(args.repeat))
+    print("RESULT_JSON:" + json.dumps({
+        "ways": args.ways, "devices": len(jax.devices()),
+        "lowering": args.lowering, "microbatches": args.microbatches,
+        "global_batch": args.global_batch, "steps": args.steps,
+        "clients": args.clients, "best_of": args.repeat,
+        "wall_s": round(wall, 4),
+        "steps_per_s": round(args.steps / wall, 2),
+        "ms_per_step": round(wall / args.steps * 1e3, 2),
+        "sharding_fallbacks": engine.report.fallbacks,
+    }))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ways", type=int, default=None,
+                    help="(child) run one mesh width in-process")
+    ap.add_argument("--sweep", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--lowering", default="gspmd",
+                    choices=["gspmd", "shard_map"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--global-batch", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--clients", type=int, default=32)
+    ap.add_argument("--repeat", type=int, default=3,
+                    help="timed passes per configuration (best-of)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: 1/2-way, few steps, best-of-2")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_train.json"))
+    args = ap.parse_args()
+    if args.ways is not None:
+        child_main(args)
+        return
+
+    if args.smoke:
+        args.sweep, args.steps, args.repeat = [1, 2], 6, 2
+
+    sweeps = []
+    for ways in args.sweep:
+        cmd = [sys.executable, __file__, "--ways", str(ways),
+               "--lowering", args.lowering,
+               "--microbatches", str(args.microbatches),
+               "--global-batch", str(args.global_batch),
+               "--steps", str(args.steps), "--clients", str(args.clients),
+               "--repeat", str(args.repeat)]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(ROOT / "src")
+        print(f"=== {ways}-way host mesh ===", flush=True)
+        proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                              timeout=1800)
+        if proc.returncode != 0:
+            print(proc.stderr[-2000:], file=sys.stderr)
+            raise SystemExit(f"{ways}-way child failed")
+        line = [l for l in proc.stdout.splitlines()
+                if l.startswith("RESULT_JSON:")][0]
+        r = json.loads(line[len("RESULT_JSON:"):])
+        sweeps.append(r)
+        print(f"  {r['steps_per_s']:7.2f} steps/s "
+              f"({r['ms_per_step']:.1f} ms/step, best of {r['best_of']})",
+              flush=True)
+
+    base = next((r["ms_per_step"] for r in sweeps if r["ways"] == 1), None)
+    if base is not None:
+        for r in sweeps:
+            r["overhead_vs_1way"] = round(r["ms_per_step"] / base, 2)
+    result = {"bench": "train_scaling", "model": "gn-resnet (paper CNN)",
+              "lowering": args.lowering, "microbatches": args.microbatches,
+              "emulated": "forced host devices share one CPU; see module "
+                          "docstring — ratios measure sharded-lowering "
+                          "overhead, not hardware speedup",
+              "sweeps": sweeps}
+    pathlib.Path(args.out).write_text(json.dumps(result, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -54,22 +54,121 @@ def slot_weights(client_ids: np.ndarray, local_batch_sizes: np.ndarray,
     return w.astype(np.float32)
 
 
-def make_train_step(model, optimizer: Optimizer,
-                    donate: bool = True) -> Callable:
-    """Fused PSL optimization step: (state, batch) -> (state, metrics)."""
+def _grad_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                        for g in jax.tree_util.tree_leaves(grads)))
+
+
+def accumulate_sum_grads(model, params, batch, num_microbatches: int,
+                         w_total):
+    """fp32 gradient of the *weighted-sum* objective, microbatch by microbatch.
+
+    Splits every batch leaf into ``num_microbatches`` leading-axis slices and
+    scans over them, accumulating
+
+        Σ_m ∇ [ loss_m · w_m  +  aux_m · w_total / M ]
+
+    where w_m is microbatch m's weight mass (``metrics["tokens"]``) and
+    ``w_total`` the full batch's. Both loss_fn implementations normalize by
+    their own weight mass, so loss_m · w_m recovers the un-normalized
+    weighted nll sum and the accumulated gradient equals w_total · ∇(full
+    weighted-mean loss) exactly; dividing by w_total afterwards reproduces
+    the fused single-pass gradient up to fp reassociation. The aux term
+    (MoE load balancing; zero for the CNN and dense LMs) enters as the mean
+    over microbatches — the standard accumulation approximation, exact
+    whenever aux_loss ≡ 0.
+
+    Returns ``(grad_sums, metric_sums)`` where ``metric_sums`` holds
+    {loss_sum (Σ loss_m·w_m), acc_sum (Σ acc_m·w_m), aux_sum, tokens}.
+    This sum form composes across data shards: psum it over the mesh's data
+    axis and normalize once (see repro.launch.distributed).
+    """
+    m = num_microbatches
+
+    def split(x):
+        if x.shape[0] % m:
+            raise ValueError(
+                f"global batch axis {x.shape[0]} not divisible into "
+                f"{m} microbatches")
+        return x.reshape((m, x.shape[0] // m) + x.shape[1:])
+
+    micro = jax.tree_util.tree_map(split, batch)
+
+    def scaled_loss(p, mb):
+        total, metrics = model.loss_fn(p, mb)
+        w_m = metrics["tokens"]
+        return metrics["loss"] * w_m + metrics["aux_loss"] * (w_total / m), \
+            metrics
+
+    def body(carry, mb):
+        g_acc, s = carry
+        (_, metrics), g = jax.value_and_grad(scaled_loss, has_aux=True)(
+            params, mb)
+        g_acc = jax.tree_util.tree_map(
+            lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+        w_m = metrics["tokens"]
+        s = {"loss_sum": s["loss_sum"] + metrics["loss"] * w_m,
+             "acc_sum": s["acc_sum"] + metrics["accuracy"] * w_m,
+             "aux_sum": s["aux_sum"] + metrics["aux_loss"],
+             "tokens": s["tokens"] + w_m}
+        return (g_acc, s), None
+
+    g0 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    s0 = {k: jnp.float32(0) for k in ("loss_sum", "acc_sum", "aux_sum",
+                                      "tokens")}
+    (grad_sums, metric_sums), _ = jax.lax.scan(body, (g0, s0), micro)
+    return grad_sums, metric_sums
+
+
+def normalize_sum_grads(grad_sums, metric_sums, num_microbatches: int):
+    """Sum-form grads/metrics → the fused step's (grads, metrics)."""
+    denom = jnp.maximum(metric_sums["tokens"], 1e-6)
+    grads = jax.tree_util.tree_map(lambda g: g / denom, grad_sums)
+    metrics = {"loss": metric_sums["loss_sum"] / denom,
+               "accuracy": metric_sums["acc_sum"] / denom,
+               "aux_loss": metric_sums["aux_sum"] / num_microbatches,
+               "tokens": metric_sums["tokens"]}
+    return grads, metrics
+
+
+def fused_grads(model, params, batch, microbatches: int = 1):
+    """Normalized full-batch gradient via microbatch accumulation.
+
+    The reference for equivalence tests and the grads entry point of the
+    distributed engine; with ``microbatches=1`` it is the fused backward in
+    sum-then-normalize form.
+    """
+    w_total = batch["weights"].astype(jnp.float32).sum()
+    g_sum, m_sum = accumulate_sum_grads(model, params, batch, microbatches,
+                                        w_total)
+    return normalize_sum_grads(g_sum, m_sum, microbatches)
+
+
+def make_train_step(model, optimizer: Optimizer, donate: bool = True,
+                    microbatches: int = 1) -> Callable:
+    """Fused PSL optimization step: (state, batch) -> (state, metrics).
+
+    ``microbatches > 1`` accumulates gradients over that many slices of the
+    global batch (for global batches larger than per-device activation
+    memory); the resulting update equals the single-pass step within fp
+    tolerance whenever aux_loss is zero (see accumulate_sum_grads).
+    """
 
     def step(state: TrainState, batch: Dict[str, Any]):
-        def loss(params):
-            return model.loss_fn(params, batch)
-        (total, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
-            state.params)
+        if microbatches > 1:
+            grads, metrics = fused_grads(model, state.params, batch,
+                                         microbatches)
+        else:
+            def loss(params):
+                return model.loss_fn(params, batch)
+            (total, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(state.params)
         updates, opt_state = optimizer.update(grads, state.opt_state,
                                               state.params)
         params = apply_updates(state.params, updates)
         metrics = dict(metrics)
-        metrics["grad_norm"] = jnp.sqrt(sum(
-            jnp.sum(g.astype(jnp.float32) ** 2)
-            for g in jax.tree_util.tree_leaves(grads)))
+        metrics["grad_norm"] = _grad_norm(grads)
         return TrainState(params=params, opt_state=opt_state,
                           step=state.step + 1), metrics
 

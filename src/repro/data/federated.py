@@ -90,11 +90,22 @@ class GlobalBatchIterator:
     Equivalent to asking client k for its next B_k^t locally-shuffled
     samples at each step; implemented as vectorized gathers against a flat
     permuted copy of the shards.
+
+    ``num_shards`` opts into the mesh-parallel slot layout: each batch's
+    rows are stably reordered by the contributing client's home data shard
+    (client k → shard k mod S, repro.launch.distributed's static map) and a
+    per-slot ``"shard"`` tag is emitted (-1 for padding). Under the sharded
+    engine, the leading-axis split of the global batch then sends (almost)
+    only shard s's clients' samples to data shard s — the host→device
+    gather is per-shard, mirroring the protocol's client→server transfer.
+    Reordering slots never changes the training step: the loss is a
+    weighted sum over slots and padding carries weight 0.
     """
 
     def __init__(self, store: ClientStore, plan: EpochPlan,
                  aggregation: str = "global_mean", seed: int = 0,
-                 pad_to: Optional[int] = None):
+                 pad_to: Optional[int] = None,
+                 num_shards: Optional[int] = None):
         self.store = store
         self.plan = plan
         self.aggregation = aggregation
@@ -113,6 +124,9 @@ class GlobalBatchIterator:
                          lengths)
         self._perm = np.lexsort((rng.random(d_total), cids))
         self._client_ids = np.arange(store.num_clients, dtype=np.int64)
+        self.num_shards = num_shards
+        self._shard_of_client = (
+            self._client_ids % num_shards if num_shards else None)
         self._consumed = False
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
@@ -129,9 +143,15 @@ class GlobalBatchIterator:
             idx = self._perm[np.repeat(self._base + cursor, sizes)
                              + _run_offsets(sizes)]
             cursor = cursor + sizes
+            cids = np.repeat(self._client_ids, sizes)
+            if self._shard_of_client is not None and len(cids):
+                # group the step's slots by home shard (stable: preserves
+                # the per-client draw order within each shard segment)
+                order = np.argsort(self._shard_of_client[cids],
+                                   kind="stable")
+                idx, cids = idx[order], cids[order]
             feats = self._flat_features[idx]
             labs = self._flat_labels[idx]
-            cids = np.repeat(self._client_ids, sizes)
             b = self.pad_to
             if feats.shape[0] < b:     # final ragged step → pad + mask
                 pad = b - feats.shape[0]
@@ -143,5 +163,10 @@ class GlobalBatchIterator:
             w = slot_weights(cids, sizes,
                              self.store.population.dataset_sizes,
                              self.aggregation)
-            yield {"features": feats, "labels": labs.astype(np.int64),
+            out = {"features": feats, "labels": labs.astype(np.int64),
                    "client_ids": cids, "weights": w, "step": t}
+            if self._shard_of_client is not None:
+                out["shard"] = np.where(
+                    cids >= 0, self._shard_of_client[np.maximum(cids, 0)],
+                    -1)
+            yield out

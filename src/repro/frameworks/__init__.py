@@ -1,7 +1,8 @@
 """Training frameworks compared in the paper: CL, SL, FL, SFL, and PSL with
 pluggable global sampling (UGS / LDS / FPLS / FLS)."""
 from repro.frameworks.trainers import (evaluate, train_cl, train_fl,
-                                       train_psl, train_sfl, train_sl)
+                                       train_psl, train_psl_sharded,
+                                       train_sfl, train_sl)
 
-__all__ = ["evaluate", "train_cl", "train_fl", "train_psl", "train_sfl",
-           "train_sl"]
+__all__ = ["evaluate", "train_cl", "train_fl", "train_psl",
+           "train_psl_sharded", "train_sfl", "train_sl"]

@@ -129,6 +129,69 @@ def train_psl(model, optimizer, store: ClientStore, test, *, epochs: int,
     return History(hist, {"tpe_ms": tpes, "em_iterations": em_iters})
 
 
+def train_psl_sharded(model, optimizer, store: ClientStore, test, *,
+                      epochs: int, global_batch_size: int,
+                      method: str = "ugs",
+                      aggregation: str = "global_mean", seed: int = 0,
+                      sampler_kwargs: Optional[dict] = None,
+                      planner_backend: str = "numpy",
+                      mesh=None, profile: str = "tp",
+                      lowering: str = "gspmd", microbatches: int = 1,
+                      track_tpe: bool = False, base_step_ms: float = 60.0
+                      ) -> History:
+    """PSL training with the fused step lowered onto a (data × model) mesh.
+
+    Same protocol as :func:`train_psl` — identical plans, batches, and
+    aggregation weights — but the step runs through
+    ``repro.launch.distributed.ShardedPSLEngine``: client params replicated
+    per data shard, server params sharded per ``profile``, the global batch
+    sharded on its leading axis, and optional microbatch gradient
+    accumulation. With ``track_tpe`` the straggler accounting uses the
+    per-shard arrival model (clients reach their home shard independently),
+    recording both epoch TPE and the per-step shard arrival skew.
+    """
+    from repro.launch.distributed import (ShardedPSLEngine,
+                                          assign_clients_to_shards,
+                                          step_timing)
+    engine = ShardedPSLEngine(model, optimizer, mesh=mesh, profile=profile,
+                              lowering=lowering, microbatches=microbatches)
+    state = engine.init_state(seed)
+    shard_of_client = assign_clients_to_shards(store.num_clients,
+                                               engine.num_shards)
+    hist: List[float] = []
+    tpes: List[float] = []
+    skews: List[float] = []
+    em_iters = 0
+    for e in range(epochs):
+        plan = sampling_lib.make_plan(method, store.population,
+                                      global_batch_size, seed=seed + e,
+                                      backend=planner_backend,
+                                      **(sampler_kwargs or {}))
+        em_iters += plan.em_iterations
+        epoch_ms = 0.0
+        for gb in GlobalBatchIterator(store, plan, aggregation,
+                                      seed=seed * 1000 + e,
+                                      num_shards=engine.num_shards):
+            if track_tpe:
+                tm = step_timing(plan.local_batch_sizes[gb["step"]],
+                                 store.population.delays, shard_of_client,
+                                 engine.num_shards,
+                                 base_step_ms=base_step_ms)
+                epoch_ms += tm.step_ms
+                skews.append(tm.shard_skew_ms)
+            batch = engine.put_batch({       # host numpy → one sharded put
+                "images": np.asarray(gb["features"], np.float32),
+                "labels": np.asarray(gb["labels"], np.int32),
+                "weights": np.asarray(gb["weights"], np.float32)})
+            state, _ = engine.step(state, batch)
+        if track_tpe:
+            tpes.append(epoch_ms)
+        _epoch_eval(model, state, test, hist)
+    return History(hist, {"tpe_ms": tpes, "em_iterations": em_iters,
+                          "shard_skew_ms": skews,
+                          "sharding_fallbacks": engine.report.fallbacks})
+
+
 # ---------------------------------------------------------------------------
 # Sequential Split Learning
 # ---------------------------------------------------------------------------

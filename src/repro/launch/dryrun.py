@@ -40,14 +40,6 @@ def _opt(name: str):
     return sgd(1e-2, momentum=0.9, weight_decay=5e-4)
 
 
-def _opt_state_shardings(opt_state_abs, params_sh, mesh):
-    rep = sh.replicated(mesh)
-    out = {}
-    for k, v in opt_state_abs.items():
-        out[k] = params_sh if k in ("mu", "m", "v") else rep
-    return out
-
-
 def _model_flops(cfg, shape, kind: str) -> float:
     n_active = cfg.param_count(active_only=True)
     tokens = shape.global_batch * (1 if kind == "decode" else shape.seq_len)
@@ -189,7 +181,7 @@ def lower_and_compile(arch: str, shape_name: str, *, multi_pod: bool,
                                step=jax.ShapeDtypeStruct((), jnp.int32))
         state_sh = TrainState(
             params=params_sh,
-            opt_state=_opt_state_shardings(opt_state_abs, params_sh, mesh),
+            opt_state=sh.opt_state_shardings(opt_state_abs, params_sh, mesh),
             step=rep)
         batch_abs = specs_lib.train_batch_specs(cfg, shape)
         batch_sh = sh.batch_shardings(batch_abs, mesh, shape.global_batch,

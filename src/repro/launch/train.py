@@ -18,18 +18,16 @@ import time
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import optim as optim_lib
-from repro import sharding as shard_lib
 from repro.checkpoint import restore, save
 from repro.configs import get_config
 from repro.core import sampling as sampling_lib
-from repro.core.psl import make_train_step, slot_weights
+from repro.core.psl import slot_weights
 from repro.core.types import ClientPopulation
 from repro.data.synthetic import make_lm_dataset
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, make_training_mesh
 from repro.models import build_model
 from repro.optim import TrainState
 
@@ -55,35 +53,33 @@ def build_lm_client_store(cfg, num_clients: int, sequences: int,
 
 
 class PSLTrainer:
-    """Sharded PSL trainer over an arbitrary mesh."""
+    """Sharded PSL trainer over an arbitrary (data × model) mesh.
+
+    A thin epoch driver around ``repro.launch.distributed.ShardedPSLEngine``
+    — the engine owns the lowering (gspmd profile shardings or explicit
+    shard_map data parallelism), batch placement, microbatching, and
+    TrainState donation; this class owns the plan-driven LM batch assembly.
+    """
 
     def __init__(self, cfg, optimizer=None, mesh=None,
-                 aggregation: str = "global_mean"):
+                 aggregation: str = "global_mean", profile: str = "tp",
+                 lowering: str = "gspmd", microbatches: int = 1):
+        from repro.launch.distributed import (ShardedPSLEngine,
+                                              assign_clients_to_shards)
         self.cfg = cfg
         self.model = build_model(cfg)
         self.optimizer = optimizer or optim_lib.adamw(1e-3)
         self.mesh = mesh or make_host_mesh()
         self.aggregation = aggregation
-        report = shard_lib.ShardingReport()
-        self.params_sh = shard_lib.model_param_shardings(self.model,
-                                                         self.mesh, report)
-        self.report = report
-        self._step = None
+        self.engine = ShardedPSLEngine(self.model, self.optimizer,
+                                       mesh=self.mesh, profile=profile,
+                                       lowering=lowering,
+                                       microbatches=microbatches)
+        self._assign = assign_clients_to_shards
+        self.report = self.engine.report
 
     def init_state(self, seed: int = 0) -> TrainState:
-        with self.mesh:
-            params = jax.jit(
-                self.model.init,
-                out_shardings=self.params_sh)(jax.random.PRNGKey(seed))
-            opt_state = jax.jit(self.optimizer.init)(params)
-        return TrainState(params=params, opt_state=opt_state,
-                          step=jnp.zeros((), jnp.int32))
-
-    def step_fn(self):
-        if self._step is None:
-            step = make_train_step(self.model, self.optimizer)
-            self._step = jax.jit(step, donate_argnums=(0,))
-        return self._step
+        return self.engine.init_state(seed)
 
     def train_epoch(self, state: TrainState, data, pop, plan,
                     seq_len: int, seed: int = 0,
@@ -93,40 +89,40 @@ class PSLTrainer:
         orders = [rng.permutation(len(d)) for d in data]
         cursors = np.zeros(len(data), np.int64)
         metrics_hist = []
-        step = self.step_fn()
         b = plan.global_batch_size
-        with self.mesh:
-            for t in range(plan.num_steps):
-                if max_steps is not None and t >= max_steps:
-                    break
-                sizes = plan.local_batch_sizes[t]
-                rows, ids = [], []
-                for k in range(len(data)):
-                    n = int(sizes[k])
-                    if n == 0:
-                        continue
-                    idx = orders[k][cursors[k]:cursors[k] + n]
-                    cursors[k] += n
-                    rows.append(data[k][idx])
-                    ids.append(np.full(n, k))
-                toks = np.concatenate(rows)
-                cids = np.concatenate(ids)
-                if toks.shape[0] < b:
-                    pad = b - toks.shape[0]
-                    toks = np.concatenate(
-                        [toks, np.zeros((pad, toks.shape[1]), toks.dtype)])
-                    cids = np.concatenate([cids, np.full(pad, -1)])
-                w = slot_weights(cids, sizes, pop.dataset_sizes,
-                                 self.aggregation)
-                batch = {
-                    "tokens": jnp.asarray(toks[:, :seq_len], jnp.int32),
-                    "labels": jnp.asarray(toks[:, 1:seq_len + 1], jnp.int32),
-                    "weights": jnp.asarray(
-                        np.repeat(w[:, None], seq_len, 1)),
-                }
-                state, metrics = step(state, batch)
-                metrics_hist.append(
-                    {k: float(v) for k, v in metrics.items()})
+        shard_of_client = self._assign(len(data), self.engine.num_shards)
+        for t in range(plan.num_steps):
+            if max_steps is not None and t >= max_steps:
+                break
+            sizes = plan.local_batch_sizes[t]
+            rows, ids = [], []
+            # visit clients grouped by home shard so the leading-axis
+            # split sends each shard (mostly) its own clients' slots
+            for k in np.argsort(shard_of_client, kind="stable"):
+                n = int(sizes[k])
+                if n == 0:
+                    continue
+                idx = orders[k][cursors[k]:cursors[k] + n]
+                cursors[k] += n
+                rows.append(data[k][idx])
+                ids.append(np.full(n, k))
+            toks = np.concatenate(rows)
+            cids = np.concatenate(ids)
+            if toks.shape[0] < b:
+                pad = b - toks.shape[0]
+                toks = np.concatenate(
+                    [toks, np.zeros((pad, toks.shape[1]), toks.dtype)])
+                cids = np.concatenate([cids, np.full(pad, -1)])
+            w = slot_weights(cids, sizes, pop.dataset_sizes,
+                             self.aggregation)
+            batch = self.engine.put_batch({
+                "tokens": toks[:, :seq_len].astype(np.int32),
+                "labels": toks[:, 1:seq_len + 1].astype(np.int32),
+                "weights": np.repeat(w[:, None], seq_len, 1),
+            })
+            state, metrics = self.engine.step(state, batch)
+            metrics_hist.append(
+                {k: float(v) for k, v in metrics.items()})
         return state, metrics_hist
 
 
@@ -150,6 +146,22 @@ def main():
                          "different PRNG), or auto (jax for large client "
                          "counts)")
     ap.add_argument("--aggregation", default="global_mean")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="(data × model) mesh for the sharded engine, e.g. "
+                         "'4x1' or '2x2'; default: one data axis over all "
+                         "visible devices. On CPU, force host devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                         "before launch (docs/training.md)")
+    ap.add_argument("--sharding", default="tp",
+                    choices=["tp", "fsdp", "ddp"],
+                    help="server-segment sharding profile")
+    ap.add_argument("--lowering", default="gspmd",
+                    choices=["gspmd", "shard_map"],
+                    help="gspmd: jit with profile shardings (production); "
+                         "shard_map: explicit data-parallel program "
+                         "(equivalence/diagnostics; use a Dx1 mesh)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient-accumulation slices of the global batch")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--d-model", type=int, default=None,
                     help="override d_model (e.g. ~100M-param presets)")
@@ -169,8 +181,14 @@ def main():
         over["num_layers"] = args.layers
     cfg = dataclasses.replace(cfg, **over)
 
-    trainer = PSLTrainer(cfg, optim_lib.adamw(args.lr))
+    mesh = make_training_mesh(args.mesh) if args.mesh else make_host_mesh()
+    trainer = PSLTrainer(cfg, optim_lib.adamw(args.lr), mesh=mesh,
+                         aggregation=args.aggregation,
+                         profile=args.sharding, lowering=args.lowering,
+                         microbatches=args.microbatches)
     state = trainer.init_state(args.seed)
+    if trainer.report.fallbacks:
+        print("sharding fallbacks:", "; ".join(trainer.report.fallbacks))
     data, pop = build_lm_client_store(cfg, args.clients, args.sequences,
                                       args.seq_len, seed=args.seed)
     n_params = sum(int(np.prod(x.shape)) for x in

@@ -155,6 +155,31 @@ def replicated(mesh: Mesh):
     return NamedSharding(mesh, PartitionSpec())
 
 
+def opt_state_shardings(opt_state_abs, params_sh, mesh: Mesh):
+    """Optimizer-slot shardings: moment slots mirror the param shardings
+    (they are param-shaped), scalar bookkeeping (count) is replicated."""
+    rep = replicated(mesh)
+    return {k: (params_sh if k in ("mu", "m", "v") else rep)
+            for k in opt_state_abs}
+
+
+def train_state_shardings(model, optimizer, mesh: Mesh,
+                          report: Optional[ShardingReport] = None,
+                          profile: str = "tp"):
+    """TrainState-shaped sharding tree for the sharded PSL step: client
+    subtree replicated over the data axes, server per profile, optimizer
+    slots mirroring the params, step counter replicated."""
+    from repro.optim import TrainState
+    params_sh = model_param_shardings(model, mesh, report, profile=profile)
+    opt_abs = jax.eval_shape(optimizer.init, model.abstract_params()
+                             if hasattr(model, "abstract_params")
+                             else jax.eval_shape(
+                                 model.init, jax.random.PRNGKey(0)))
+    return TrainState(params=params_sh,
+                      opt_state=opt_state_shardings(opt_abs, params_sh, mesh),
+                      step=replicated(mesh))
+
+
 # --------------------------------------------------------------------------
 # Activation sharding constraints (§Perf: GSPMD needs explicit hints to keep
 # residual-stream activations sharded under ddp / sequence-parallel layouts;

@@ -1,7 +1,8 @@
 """Documentation stays in sync with the code it references.
 
 Runs the same linter as CI's docs-lint job: every repository path and
-``repro.*`` module mentioned in README.md / docs/*.md must exist.
+``repro.*`` module mentioned in README.md / docs/**/*.md must exist, and
+every import / examples script inside fenced code blocks must resolve.
 """
 import pathlib
 import sys
@@ -13,7 +14,7 @@ def test_readme_and_docs_reference_existing_paths():
     sys.path.insert(0, str(REPO / "tools"))
     import check_doc_paths
 
-    files = [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+    files = [REPO / "README.md"] + sorted((REPO / "docs").glob("**/*.md"))
     assert files, "README.md / docs/ missing"
     problems = check_doc_paths.check([str(f) for f in files])
     assert not problems, "\n".join(problems)

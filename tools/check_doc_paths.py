@@ -7,8 +7,15 @@ and exits non-zero listing any that do not resolve inside the repository.
 Used by CI and by tests/test_docs.py so documentation cannot drift from the
 code it describes.
 
+Fenced code blocks get a stricter pass (``check_code_blocks``): every
+``import repro.X`` / ``from repro.X import name`` a reader could paste must
+resolve — the module must exist and each imported name must be defined in
+(or re-exported by) its source — and every ``examples/*.py`` token must be
+a real script. So documentation snippets cannot silently rot when a symbol
+is renamed.
+
 Usage: python tools/check_doc_paths.py [file.md ...]
-(default: README.md and docs/*.md)
+(default: README.md and docs/**/*.md)
 """
 from __future__ import annotations
 
@@ -25,6 +32,103 @@ _PATH_RE = re.compile(
     r"/[\w./-]+\.[\w]+)")
 # dotted module references rooted at the repro package
 _MODULE_RE = re.compile(r"(?<![\w.])(repro(?:\.[a-z_][\w]*)+)")
+
+
+# fenced code blocks (``` ... ```), language tag ignored
+_FENCE_RE = re.compile(r"^```[^\n]*\n(.*?)^```", re.M | re.S)
+# import forms a reader could paste from a snippet
+_FROM_IMPORT_RE = re.compile(
+    r"^\s*from\s+(repro(?:\.[\w]+)*)\s+import\s+(\([^)]*\)|[^\n]*)",
+    re.M)
+_IMPORT_RE = re.compile(r"^\s*import\s+(repro(?:\.[\w]+)*)", re.M)
+_EXAMPLE_RE = re.compile(r"(?<![\w/.])(examples/[\w.-]+\.py)")
+
+
+def _module_path(dotted: str):
+    """Source file backing a dotted module: the module .py or the package
+    __init__.py; None when neither exists."""
+    rel = REPO / "src" / pathlib.Path(*dotted.split("."))
+    if rel.with_suffix(".py").exists():
+        return rel.with_suffix(".py")
+    if (rel / "__init__.py").exists():
+        return rel / "__init__.py"
+    return None
+
+
+def _module_top_level_names(path) -> set:
+    """Names bound at a module's top level (defs, classes, assignments, and
+    import aliases — covers re-exports in package __init__ files). AST-based
+    so function-local bindings never leak into the importable surface."""
+    import ast
+    names: set = set()
+    for node in ast.parse(path.read_text()).body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                            ast.Name):
+            names.add(node.target.id)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for a in node.names:
+                names.add(a.asname or a.name.split(".")[0])
+    return names
+
+
+def _name_defined_in(dotted: str, name: str) -> bool:
+    """Is ``name`` importable from module ``dotted``? True for submodules
+    and for top-level bindings of the module's own source."""
+    if _module_path(f"{dotted}.{name}") is not None:
+        return True
+    path = _module_path(dotted)
+    if path is None:
+        return False
+    return name in _module_top_level_names(path)
+
+
+def check_code_blocks(files) -> list[str]:
+    """Lint fenced code blocks: repro imports must resolve name-by-name and
+    examples/*.py references must exist."""
+    problems = []
+    for md in files:
+        text = pathlib.Path(md).read_text()
+        for block in _FENCE_RE.finditer(text):
+            code = block.group(1)
+            for m in _IMPORT_RE.finditer(code):
+                if _module_path(m.group(1)) is None:
+                    problems.append(
+                        f"{md}: code block imports missing module "
+                        f"{m.group(1)!r}")
+            for m in _FROM_IMPORT_RE.finditer(code):
+                mod = m.group(1)
+                if _module_path(mod) is None:
+                    problems.append(
+                        f"{md}: code block imports from missing module "
+                        f"{mod!r}")
+                    continue
+                imported = re.sub(r"#[^\n]*", "", m.group(2))  # strip comments
+                tokens = [t for t in re.findall(r"[\w]+", imported)
+                          if not t.isdigit()]
+                names, skip = [], False
+                for t in tokens:
+                    if skip or t == "as":     # drop 'as' and its alias
+                        skip = t == "as"
+                        continue
+                    names.append(t)
+                for n in names:
+                    if not _name_defined_in(mod, n):
+                        problems.append(
+                            f"{md}: code block imports {n!r} which "
+                            f"{mod} does not define")
+            for m in _EXAMPLE_RE.finditer(code):
+                if not (REPO / m.group(1)).exists():
+                    problems.append(
+                        f"{md}: code block references missing script "
+                        f"{m.group(1)!r}")
+    return sorted(set(problems))
 
 
 def _module_exists(dotted: str) -> bool:
@@ -52,14 +156,14 @@ def check(files) -> list[str]:
         for m in _MODULE_RE.finditer(text):
             if not _module_exists(m.group(1)):
                 problems.append(f"{md}: missing module {m.group(1)!r}")
-    return sorted(set(problems))
+    return sorted(set(problems) | set(check_code_blocks(files)))
 
 
 def main(argv) -> int:
     import os
     os.chdir(REPO)
     files = argv[1:] or ["README.md"] + sorted(
-        str(p) for p in pathlib.Path("docs").glob("*.md"))
+        str(p) for p in pathlib.Path("docs").glob("**/*.md"))
     problems = check(files)
     for p in problems:
         print(p, file=sys.stderr)
