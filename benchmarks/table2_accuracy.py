@@ -5,56 +5,66 @@ Scaled-down reproduction (documented in DESIGN.md): synthetic CIFAR-like
 data, GN-ResNet (reduced), K=8 clients, few epochs — the paper's qualitative
 claims (UGS/LDS ≈ CL everywhere; FPLS/FLS/FL/SFL collapse under non-IID)
 are the validation target, not the absolute numbers.
+
+Every run is one :class:`repro.api.ExperimentSpec`: the frameworks differ
+only in ``protocol.name`` / ``sampler.method`` overrides of one base spec,
+so the whole table is a spec sweep through ``repro.api.run``.
 """
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro import optim
-from repro.configs import get_config
-from repro.core.partition import partition_dirichlet, partition_iid
-from repro.data.federated import ClientStore
-from repro.data.synthetic import make_classification_dataset
-from repro.frameworks import (train_cl, train_fl, train_psl, train_sfl,
-                              train_sl)
-from repro.models.cnn import CNNModel
+from repro import api
 from benchmarks.common import Csv
 
 
-def run(csv: Csv, quick: bool = False):
+def base_spec(quick: bool, iid: bool) -> api.ExperimentSpec:
     n_train, n_test = (2500, 500) if quick else (4000, 800)
     epochs = 6 if quick else 10
-    k = 8
-    img = 16
-    X, y = make_classification_dataset(n_train, image_size=img, seed=0)
-    Xt, yt = make_classification_dataset(n_test, image_size=img, seed=99)
-    model = CNNModel(get_config("paper-cnn", reduced=True))
-    mk_opt = lambda: optim.sgd(5e-2, momentum=0.9, weight_decay=5e-4)
-    b = 64
+    k, b = 8, 64
+    return api.ExperimentSpec(
+        seed=0,
+        model=api.ModelSpec(arch="paper-cnn", reduced=True),
+        optimizer=api.OptimizerSpec(name="sgd", lr=5e-2, momentum=0.9,
+                                    weight_decay=5e-4),
+        data=api.DataSpec(num_train=n_train, num_test=n_test,
+                          image_size=16, num_clients=k,
+                          partition="iid" if iid else "dirichlet",
+                          partition_seed=1),
+        protocol=api.ProtocolSpec(name="psl", epochs=epochs,
+                                  global_batch_size=b, batch_size=b))
 
+
+def framework_specs(quick: bool, iid: bool):
+    """(name, spec) per compared framework — the Table II row set."""
+    base = base_spec(quick, iid)
+    k = base.data.num_clients
+    local_bs = base.protocol.global_batch_size // k
+    yield "cl", base.replace(
+        protocol=base.protocol.replace(name="cl"))
+    for method in ("ugs", "lds", "fpls", "fls"):
+        kw = {"delta": 0.0} if method == "lds" else {}
+        yield f"psl_{method}", base.replace(
+            sampler=api.SamplerSpec(method=method, kwargs=kw))
+    for proto in ("sl", "fl", "sfl"):
+        yield proto, base.replace(
+            protocol=base.protocol.replace(name=proto,
+                                           batch_size=local_bs))
+
+
+def run(csv: Csv, quick: bool = False):
+    k = 8
     for iid in (True, False):
         tag = "iid" if iid else "noniid"
-        part = partition_iid if iid else partition_dirichlet
-        parts, pop = part(y, k, 10, seed=1)
-        store = ClientStore.from_partition(X, y, parts, pop)
-
+        specs = list(framework_specs(quick, iid))
+        # one materialized context per tag: the specs differ only in
+        # protocol/sampler, so data and model are shared (and the timed
+        # region covers training, not dataset synthesis — as before)
+        ctx = api.build_context(specs[0][1])
         runs = {}
         t0 = time.perf_counter()
-        runs["cl"] = train_cl(model, mk_opt(), X, y, (Xt, yt),
-                              epochs=epochs, batch_size=b, seed=0)
-        for method in ("ugs", "lds", "fpls", "fls"):
-            kw = {"sampler_kwargs": {"delta": 0.0}} if method == "lds" else {}
-            runs[f"psl_{method}"] = train_psl(
-                model, mk_opt(), store, (Xt, yt), epochs=epochs,
-                global_batch_size=b, method=method, seed=0, **kw)
-        runs["sl"] = train_sl(model, mk_opt(), store, (Xt, yt),
-                              epochs=epochs, batch_size=b // k, seed=0)
-        runs["fl"] = train_fl(model, mk_opt(), store, (Xt, yt),
-                              epochs=epochs, batch_size=b // k, seed=0)
-        runs["sfl"] = train_sfl(model, mk_opt(), store, (Xt, yt),
-                                epochs=epochs, batch_size=b // k, seed=0)
+        for name, spec in specs:
+            runs[name] = api.run(spec, ctx=ctx).history
         us = (time.perf_counter() - t0) * 1e6
         derived = ";".join(f"{n}_best={h.best:.4f}" for n, h in runs.items())
         csv.add(f"table2_accuracy[{tag},K={k}]", us, derived)

@@ -1,44 +1,48 @@
 """Paper Table III: PSL+LDS test accuracy under stragglers for (p_s, Δ)
 — the robustness claim: accuracy stays at the UGS level for all Δ.
-Scaled-down (synthetic data, reduced GN-ResNet, K=8)."""
+Scaled-down (synthetic data, reduced GN-ResNet, K=8).
+
+Each cell is one :class:`repro.api.ExperimentSpec` — straggler injection
+(``data.straggler``), the LDS Δ (``sampler.kwargs.delta``), and TPE
+tracking (``protocol.track_tpe``) are all spec fields."""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from repro import optim
-from repro.configs import get_config
-from repro.core.partition import partition_dirichlet
-from repro.core.straggler import assign_delays
-from repro.data.federated import ClientStore
-from repro.data.synthetic import make_classification_dataset
-from repro.frameworks import train_psl
-from repro.models.cnn import CNNModel
+from repro import api
 from benchmarks.common import Csv
 
 
-def run(csv: Csv, quick: bool = False):
+def cell_spec(quick: bool, ps: float, delta: float) -> api.ExperimentSpec:
     n_train, n_test = (2500, 500) if quick else (4000, 800)
     epochs = 5 if quick else 8
-    k = 8
-    X, y = make_classification_dataset(n_train, image_size=16, seed=0)
-    Xt, yt = make_classification_dataset(n_test, image_size=16, seed=99)
-    parts, pop = partition_dirichlet(y, k, 10, seed=1)
-    model = CNNModel(get_config("paper-cnn", reduced=True))
-    mk_opt = lambda: optim.sgd(5e-2, momentum=0.9, weight_decay=5e-4)
+    return api.ExperimentSpec(
+        seed=0,
+        model=api.ModelSpec(arch="paper-cnn", reduced=True),
+        optimizer=api.OptimizerSpec(name="sgd", lr=5e-2, momentum=0.9,
+                                    weight_decay=5e-4),
+        data=api.DataSpec(num_train=n_train, num_test=n_test,
+                          image_size=16, num_clients=8,
+                          partition="dirichlet", partition_seed=1,
+                          straggler=api.StragglerSpec(
+                              p_straggler=ps, w_min=100, w_max=500,
+                              seed=int(ps * 100))),
+        sampler=api.SamplerSpec(method="lds", kwargs={"delta": delta}),
+        protocol=api.ProtocolSpec(name="psl", epochs=epochs,
+                                  global_batch_size=64, track_tpe=True))
 
+
+def run(csv: Csv, quick: bool = False):
     pss = [0.2] if quick else [0.1, 0.2, 0.3]
     deltas = [0.0, 1.5] if quick else [0.0, 0.5, 1.0, 1.5]
     for ps in pss:
-        pop.delays[:] = assign_delays(k, ps, 100, 500, seed=int(ps * 100))
-        store = ClientStore.from_partition(X, y, parts, pop)
+        # cells within a p_s share data/model; only the LDS Δ varies
+        ctx = api.build_context(cell_spec(quick, ps, deltas[0]))
         for delta in deltas:
             t0 = time.perf_counter()
-            h = train_psl(model, mk_opt(), store, (Xt, yt), epochs=epochs,
-                          global_batch_size=64, method="lds",
-                          sampler_kwargs={"delta": delta}, seed=0,
-                          track_tpe=True)
+            h = api.run(cell_spec(quick, ps, delta), ctx=ctx).history
             us = (time.perf_counter() - t0) * 1e6
             tpe = float(np.mean(h.extras["tpe_ms"])) / 1000
             csv.add(f"table3_lds_accuracy[ps={ps},delta={delta}]", us,

@@ -1,6 +1,10 @@
 """Full paper reproduction (scaled): Table II frameworks comparison under
 IID and non-IID splits, with convergence curves (Fig. 5).
 
+Every framework run is one declarative ``repro.api.ExperimentSpec`` driven
+through ``repro.api.run`` (see ``benchmarks/table2_accuracy.py`` — the
+frameworks differ only in ``protocol.name``/``sampler.method`` overrides).
+
   PYTHONPATH=src python examples/paper_repro.py [--full]
 """
 import argparse

@@ -4,47 +4,54 @@ Trains the paper's GroupNorm ResNet on synthetic CIFAR-like data split
 non-IID across 8 clients, comparing UGS against the default fixed
 proportional sampling (FPLS) — the paper's headline effect in ~2 minutes.
 
+Each run is one declarative :class:`repro.api.ExperimentSpec`; the three
+frameworks differ only in ``protocol.name`` / ``sampler.method``, and the
+UGS spec is printed as JSON so the experiment can be re-run with
+``python -m repro.launch.train --config ugs_spec.json``.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import sys
 sys.path.insert(0, "src")
 
-from repro import optim
-from repro.configs import get_config
-from repro.core.partition import partition_dirichlet
-from repro.data.federated import ClientStore
-from repro.data.synthetic import make_classification_dataset
-from repro.frameworks import train_cl, train_psl
-from repro.models.cnn import CNNModel
+from repro import api
 
 
 def main():
     print("== PSL quickstart: UGS vs FPLS on non-IID clients ==")
-    X, y = make_classification_dataset(3000, image_size=16, seed=0)
-    Xt, yt = make_classification_dataset(600, image_size=16, seed=99)
-    parts, pop = partition_dirichlet(y, num_clients=8, num_classes=10,
-                                     classes_per_client=2, seed=1)
-    store = ClientStore.from_partition(X, y, parts, pop)
-    print("client dataset sizes:", pop.dataset_sizes.tolist())
+    epochs = 6
+    base = api.ExperimentSpec(
+        seed=0,
+        model=api.ModelSpec(arch="paper-cnn", reduced=True),
+        optimizer=api.OptimizerSpec(name="sgd", lr=5e-2, momentum=0.9,
+                                    weight_decay=5e-4),
+        data=api.DataSpec(num_train=3000, num_test=600, image_size=16,
+                          num_clients=8, partition="dirichlet",
+                          partition_seed=1),
+        sampler=api.SamplerSpec(method="ugs"),
+        protocol=api.ProtocolSpec(name="psl", epochs=epochs,
+                                  global_batch_size=64, batch_size=64))
 
-    model = CNNModel(get_config("paper-cnn", reduced=True))
-    mk_opt = lambda: optim.sgd(5e-2, momentum=0.9, weight_decay=5e-4)
+    ctx = api.build_context(base)
+    print("client dataset sizes:", ctx.data.pop.dataset_sizes.tolist())
 
-    h_ugs = train_psl(model, mk_opt(), store, (Xt, yt), epochs=6,
-                      global_batch_size=64, method="ugs", seed=0)
-    h_fpls = train_psl(model, mk_opt(), store, (Xt, yt), epochs=6,
-                       global_batch_size=64, method="fpls", seed=0)
-    h_cl = train_cl(model, mk_opt(), X, y, (Xt, yt), epochs=6,
-                    batch_size=64, seed=0)
+    # one materialized context (data + model), three spec variants
+    h_ugs = api.run(base, ctx=ctx).history
+    h_fpls = api.run(api.apply_overrides(
+        base, ["sampler.method=fpls"]), ctx=ctx).history
+    h_cl = api.run(api.apply_overrides(
+        base, ["protocol.name=cl"]), ctx=ctx).history
 
     print(f"\n{'epoch':>6} {'CL':>8} {'PSL+UGS':>9} {'PSL+FPLS':>9}")
-    for e in range(6):
+    for e in range(epochs):
         print(f"{e:>6} {h_cl.test_acc[e]:>8.3f} {h_ugs.test_acc[e]:>9.3f} "
               f"{h_fpls.test_acc[e]:>9.3f}")
     print(f"\nbest:  CL={h_cl.best:.3f}  UGS={h_ugs.best:.3f}  "
           f"FPLS={h_fpls.best:.3f}")
     print("UGS tracks central learning under non-IID; fixed local batch "
           "sizes lag (paper Table II).")
+    print("\nthe UGS run as one reproducible JSON spec:")
+    print(base.to_json())
 
 
 if __name__ == "__main__":

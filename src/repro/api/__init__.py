@@ -1,0 +1,39 @@
+"""`repro.api` — the declarative experiment API.
+
+One serializable :class:`ExperimentSpec` pins an experiment; one protocol
+registry maps ``protocol.name`` to a strategy object; one training loop
+(:func:`repro.api.loop.fit`) drives every strategy; :func:`run` ties them
+together. See docs/api.md.
+"""
+from repro.api.cli import apply_overrides, load_spec, parse_set
+from repro.api.evaluation import batch_from, evaluate, jitted_predict
+from repro.api.events import (Callback, CheckpointCallback, ConsoleLogger,
+                              EvalCallback, Event, PlanStatsCallback,
+                              ShardArrivalCallback, StragglerTPECallback)
+from repro.api.loop import (DataBundle, History, RunContext, RunResult,
+                            fit)
+from repro.api.registry import (ProtocolStrategy, StepItem,
+                                UnknownProtocolError, available_protocols,
+                                get_protocol, register_protocol)
+from repro.api.runner import (build_context, build_data, build_model,
+                              build_optimizer, default_callbacks, run)
+from repro.api.specs import (DataSpec, EvalSpec, ExecutionSpec,
+                             ExperimentSpec, ModelSpec, OptimizerSpec,
+                             ProtocolSpec, SamplerSpec, SpecError,
+                             StragglerSpec)
+
+__all__ = [
+    "ExperimentSpec", "ModelSpec", "OptimizerSpec", "DataSpec",
+    "SamplerSpec", "ProtocolSpec", "ExecutionSpec", "EvalSpec",
+    "StragglerSpec", "SpecError",
+    "run", "fit", "build_context", "build_data", "build_model",
+    "build_optimizer", "default_callbacks",
+    "register_protocol", "get_protocol", "available_protocols",
+    "ProtocolStrategy", "StepItem", "UnknownProtocolError",
+    "RunContext", "RunResult", "DataBundle", "History",
+    "Event", "Callback", "EvalCallback", "PlanStatsCallback",
+    "StragglerTPECallback", "ShardArrivalCallback", "CheckpointCallback",
+    "ConsoleLogger",
+    "batch_from", "evaluate", "jitted_predict",
+    "apply_overrides", "parse_set", "load_spec",
+]

@@ -1,0 +1,88 @@
+"""Config-file + dotted-override plumbing for spec-driven CLIs.
+
+One experiment is one JSON document; the CLI surface is::
+
+    --config spec.json --set protocol.epochs=10 --set sampler.method=lds \
+        --set sampler.kwargs.delta=1.5
+
+``parse_set`` parses one ``key=value`` item (value via JSON, falling back
+to a bare string); ``apply_overrides`` walks the dotted path through the
+spec tree (validating every segment against the dataclass schema — except
+inside free-form dict leaves like ``sampler.kwargs``) and returns a new
+spec.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Iterable, Tuple
+
+from repro.api.specs import ExperimentSpec, SpecError
+
+
+def parse_set(item: str) -> Tuple[str, Any]:
+    """"a.b.c=VALUE" -> ("a.b.c", parsed VALUE).
+
+    VALUE is parsed as JSON (numbers, booleans, null, quoted strings,
+    lists), with a bare-word fallback to a plain string — so
+    ``--set sampler.method=lds`` and ``--set sampler.kwargs.delta=1.5``
+    both do what they look like.
+    """
+    key, sep, raw = item.partition("=")
+    if not sep or not key:
+        raise SpecError(f"override {item!r} is not of the form key=value")
+    try:
+        value = json.loads(raw)
+    except json.JSONDecodeError:
+        value = raw
+    return key, value
+
+
+# the only free-form dict leaves in the spec tree; inside them new keys
+# may be created (everything else is schema-checked against the dataclass
+# field set, which a spec dict always serializes in full)
+_FREE_FORM = ("kwargs", "overrides")
+
+
+def _set_dotted(tree: Dict[str, Any], key: str, value: Any) -> None:
+    """Set tree[a][b][c] = value for key "a.b.c", schema-checked.
+
+    Path segments must exist in the nested spec dicts (so typos fail
+    loudly); once the walk enters a free-form dict leaf (e.g.
+    ``sampler.kwargs``) new keys may be created.
+    """
+    parts = key.split(".")
+    node = tree
+    in_schema = True
+    for i, p in enumerate(parts[:-1]):
+        if p not in node:
+            if in_schema:
+                raise SpecError(
+                    f"override path {key!r}: unknown field {p!r} "
+                    f"(known: {sorted(node)})")
+            node[p] = {}
+        if not isinstance(node[p], dict):
+            raise SpecError(
+                f"override path {key!r}: {'.'.join(parts[:i + 1])!r} "
+                f"is a leaf, not a section")
+        in_schema = in_schema and p not in _FREE_FORM
+        node = node[p]
+    leaf = parts[-1]
+    if in_schema and leaf not in node:
+        raise SpecError(f"override path {key!r}: unknown field {leaf!r} "
+                        f"(known: {sorted(node)})")
+    node[leaf] = value
+
+
+def apply_overrides(spec: ExperimentSpec,
+                    sets: Iterable[str]) -> ExperimentSpec:
+    """Apply ``key=value`` dotted overrides, returning a new spec."""
+    d = spec.to_dict()
+    for item in sets:
+        key, value = parse_set(item)
+        _set_dotted(d, key, value)
+    return type(spec).from_dict(d)
+
+
+def load_spec(path: str) -> ExperimentSpec:
+    with open(path) as f:
+        return ExperimentSpec.from_json(f.read())

@@ -1,0 +1,122 @@
+"""Protocol strategy registry.
+
+A *protocol strategy* packages the four protocol-specific ingredients —
+epoch planning, batch assembly, the step function, and the end-of-round
+aggregation hook — behind one interface, so every protocol (CL / SL / FL /
+SFL / PSL, and future variants like CycleSL or GAPSL) is driven by the same
+training loop in :mod:`repro.api.loop`. Adding a scenario costs one
+registry entry::
+
+    @register_protocol("cyclesl")
+    class CycleSLStrategy(ProtocolStrategy):
+        ...
+
+and is immediately reachable from JSON specs (``protocol.name``), the CLI,
+and the benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, List, Optional, Tuple, Type
+
+
+class UnknownProtocolError(KeyError):
+    """Lookup of a protocol name that was never registered."""
+
+
+_PROTOCOLS: Dict[str, Type["ProtocolStrategy"]] = {}
+
+
+def register_protocol(name: str, *, replace: bool = False):
+    """Class decorator: make a :class:`ProtocolStrategy` reachable by name."""
+    def deco(cls: Type["ProtocolStrategy"]) -> Type["ProtocolStrategy"]:
+        if name in _PROTOCOLS and not replace:
+            raise ValueError(
+                f"protocol {name!r} already registered "
+                f"({_PROTOCOLS[name].__name__}); pass replace=True to "
+                f"override")
+        cls.name = name
+        _PROTOCOLS[name] = cls
+        return cls
+    return deco
+
+
+def get_protocol(name: str) -> Type["ProtocolStrategy"]:
+    _ensure_builtins()
+    try:
+        return _PROTOCOLS[name]
+    except KeyError:
+        raise UnknownProtocolError(
+            f"unknown protocol {name!r}; registered: "
+            f"{available_protocols()}") from None
+
+
+def available_protocols() -> List[str]:
+    _ensure_builtins()
+    return sorted(_PROTOCOLS)
+
+
+def _ensure_builtins() -> None:
+    # registering the built-in strategies is an import side effect of
+    # repro.api.protocols; import lazily to avoid a registry<->protocols
+    # cycle at module load
+    if not _PROTOCOLS:
+        import repro.api.protocols  # noqa: F401
+
+
+class StepItem:
+    """One unit of work yielded by a strategy's batch assembly.
+
+    ``batch`` is whatever the strategy's ``step`` consumes; ``scope`` tags
+    the sub-context (e.g. the client id in SL/FL/SFL; None for global
+    streams); ``info`` carries per-step diagnostics (e.g. straggler arrival
+    timing) that the loop forwards to callbacks on the step event.
+    """
+
+    __slots__ = ("batch", "scope", "info")
+
+    def __init__(self, batch: Any, scope: Any = None,
+                 info: Optional[Dict[str, Any]] = None):
+        self.batch = batch
+        self.scope = scope
+        self.info = info
+
+
+class ProtocolStrategy:
+    """Interface the shared loop (repro.api.loop.fit) drives.
+
+    One instance serves one run; put per-run mutable state (RNGs, engines,
+    jitted steps) in the *protocol state* returned by :meth:`setup` or on
+    the instance. The loop calls, per epoch::
+
+        plan  = strategy.plan_epoch(ctx, epoch)           # may be None
+        for item in strategy.epoch_batches(ctx, pstate, plan, epoch):
+            pstate, metrics = strategy.step(ctx, pstate, item)
+        pstate = strategy.end_epoch(ctx, pstate, epoch)   # aggregation hook
+
+    and evaluates ``strategy.eval_params(ctx, pstate)`` on the epoch-end
+    event.
+    """
+
+    name: str = "?"
+
+    def setup(self, ctx) -> Any:
+        raise NotImplementedError
+
+    def plan_epoch(self, ctx, epoch: int):
+        return None
+
+    def epoch_batches(self, ctx, pstate, plan, epoch: int
+                      ) -> Iterator[StepItem]:
+        raise NotImplementedError
+
+    def step(self, ctx, pstate, item: StepItem) -> Tuple[Any, Dict]:
+        raise NotImplementedError
+
+    def end_epoch(self, ctx, pstate, epoch: int) -> Any:
+        return pstate
+
+    def eval_params(self, ctx, pstate) -> Any:
+        raise NotImplementedError
+
+    def finalize(self, ctx, pstate, record) -> None:
+        """Last hook before run_end; may write protocol extras."""

@@ -1,0 +1,143 @@
+"""Materialize an ExperimentSpec and run it: ``repro.api.run(spec)``.
+
+``run`` is the single entry point behind the launch CLI, the accuracy
+benchmarks, and the examples: it builds the model, optimizer, and data
+bundle the spec describes, picks the registered protocol strategy, wires
+the default callbacks (eval / plan stats / straggler timing / checkpoint),
+and drives the shared loop. Everything is pinned by the spec, so::
+
+    run(ExperimentSpec.from_json(text))
+
+reproduces an experiment from one JSON document.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.api import events as events_lib
+from repro.api.loop import DataBundle, RunContext, RunResult, fit
+from repro.api.registry import get_protocol
+from repro.api.specs import DataSpec, ExperimentSpec, ModelSpec, \
+    OptimizerSpec
+
+
+def build_model(spec: ModelSpec, *, seq_len: Optional[int] = None):
+    """Model instance for a ModelSpec (CNN or LM family), with overrides."""
+    from repro.configs import get_config
+    cfg = get_config(spec.arch, reduced=spec.reduced)
+    over = dict(spec.overrides)
+    if spec.arch != "paper-cnn" and seq_len is not None \
+            and "max_seq_len" not in over:
+        over["max_seq_len"] = max(seq_len, 256)
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    if spec.arch == "paper-cnn":
+        from repro.models.cnn import CNNModel
+        return CNNModel(cfg)
+    from repro.models import build_model as build_lm
+    return build_lm(cfg)
+
+
+def build_optimizer(spec: OptimizerSpec):
+    from repro import optim
+    if spec.name == "sgd":
+        return optim.sgd(spec.lr, momentum=spec.momentum,
+                         weight_decay=spec.weight_decay, **spec.kwargs)
+    return optim.adamw(spec.lr, weight_decay=spec.weight_decay,
+                       **spec.kwargs)
+
+
+def build_data(spec: DataSpec, *, vocab_size: Optional[int] = None
+               ) -> DataBundle:
+    """Materialize the federation a DataSpec describes."""
+    if spec.kind == "synthetic_lm":
+        from repro.data.federated import build_lm_client_store
+        if vocab_size is None:
+            raise ValueError("synthetic_lm data needs the model vocab size")
+        data, pop = build_lm_client_store(vocab_size, spec.num_clients,
+                                          spec.sequences, spec.seq_len,
+                                          seed=spec.seed)
+        return DataBundle(kind=spec.kind, lm_data=data, pop=pop,
+                          seq_len=spec.seq_len)
+
+    from repro.core.partition import partition_dirichlet, partition_iid
+    from repro.data.federated import ClientStore
+    from repro.data.synthetic import make_classification_dataset
+    features, labels = make_classification_dataset(
+        spec.num_train, num_classes=spec.num_classes,
+        image_size=spec.image_size, seed=spec.seed)
+    test = make_classification_dataset(
+        spec.num_test, num_classes=spec.num_classes,
+        image_size=spec.image_size, seed=spec.test_seed)
+    if spec.partition == "iid":
+        parts, pop = partition_iid(labels, spec.num_clients,
+                                   spec.num_classes,
+                                   seed=spec.partition_seed)
+    else:
+        parts, pop = partition_dirichlet(
+            labels, spec.num_clients, spec.num_classes,
+            classes_per_client=spec.classes_per_client,
+            concentration=spec.concentration, seed=spec.partition_seed)
+    if spec.straggler is not None:
+        from repro.core.straggler import assign_delays
+        s = spec.straggler
+        pop.delays[:] = assign_delays(spec.num_clients, s.p_straggler,
+                                      s.w_min, s.w_max, seed=s.seed)
+    store = ClientStore.from_partition(features, labels, parts, pop)
+    return DataBundle(kind=spec.kind, train=(features, labels), test=test,
+                      store=store, pop=pop)
+
+
+def default_callbacks(spec: ExperimentSpec, data: DataBundle
+                      ) -> List[events_lib.Callback]:
+    """The callback set reproducing the legacy trainers' History shape."""
+    cbs: List[events_lib.Callback] = []
+    if spec.eval.enabled and data.test is not None:
+        cbs.append(events_lib.EvalCallback(every=spec.eval.every,
+                                           batch_size=spec.eval.batch_size))
+    if spec.protocol.name == "psl":
+        cbs.append(events_lib.PlanStatsCallback())
+        if spec.execution.engine == "sharded" \
+                or data.kind == "synthetic_lm":
+            cbs.append(events_lib.ShardArrivalCallback(
+                track=spec.protocol.track_tpe))
+        else:
+            cbs.append(events_lib.StragglerTPECallback(
+                base_step_ms=spec.protocol.base_step_ms,
+                track=spec.protocol.track_tpe))
+    if spec.execution.checkpoint:
+        cbs.append(events_lib.CheckpointCallback(spec.execution.checkpoint))
+    return cbs
+
+
+def build_context(spec: ExperimentSpec) -> RunContext:
+    """Spec → built objects, without running anything."""
+    spec.validate()
+    model = build_model(spec.model, seq_len=spec.data.seq_len)
+    vocab = getattr(getattr(model, "cfg", None), "vocab_size", None)
+    data = build_data(spec.data, vocab_size=vocab)
+    optimizer = build_optimizer(spec.optimizer)
+    return RunContext(model=model, optimizer=optimizer, data=data,
+                      spec=spec, seed=spec.seed)
+
+
+def run(spec: ExperimentSpec, callbacks=(), ctx: Optional[RunContext] = None
+        ) -> RunResult:
+    """Run one experiment: build from the spec, fit, return the result.
+
+    ``callbacks`` extend (never replace) the defaults derived from the
+    spec; pass a prebuilt ``ctx`` to reuse already-materialized data or
+    models across runs.
+    """
+    if ctx is None:
+        ctx = build_context(spec)
+    else:
+        # rebind the context to THIS spec (shares model/optimizer/data):
+        # strategies and the loop read protocol/sampler/execution off
+        # ctx.spec, so a stale spec would silently win over the argument
+        spec.validate()
+        ctx = dataclasses.replace(ctx, spec=spec, seed=spec.seed)
+    strategy = get_protocol(spec.protocol.name)()
+    cbs = default_callbacks(spec, ctx.data) + list(callbacks)
+    return fit(ctx, strategy, cbs)

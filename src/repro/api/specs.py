@@ -1,0 +1,296 @@
+"""Declarative experiment specifications (the `repro.api` surface).
+
+An :class:`ExperimentSpec` is a serializable dataclass tree that pins every
+axis of a run — model, optimizer, data, sampling policy, training protocol,
+execution backend, evaluation — so one JSON document reproduces one
+experiment end to end::
+
+    spec = ExperimentSpec.from_json(pathlib.Path("spec.json").read_text())
+    result = repro.api.run(spec)
+
+The axes are deliberately orthogonal (the paper's drop-in claim): swapping
+``sampler.method`` from "fpls" to "ugs", ``protocol.name`` from "psl" to
+"sfl", or ``execution.engine`` from "fused" to "sharded" never touches the
+other fields. ``to_dict``/``from_dict``/``to_json``/``from_json`` round-trip
+exactly; ``from_dict`` rejects unknown keys so stale configs fail loudly.
+Dotted-path overrides (``repro.api.cli.apply_overrides``) edit any leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import typing
+from typing import Any, Dict, Optional
+
+
+class SpecError(ValueError):
+    """Raised for malformed or semantically invalid specifications."""
+
+
+def _unwrap_optional(tp):
+    """Optional[X] -> X (passes every other type annotation through)."""
+    if typing.get_origin(tp) is typing.Union:
+        args = [a for a in typing.get_args(tp) if a is not type(None)]
+        if len(args) == 1:
+            return args[0]
+    return tp
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecBase:
+    """Shared (de)serialization for every spec node.
+
+    Nested spec fields are discovered from type annotations, so subclasses
+    only declare fields; ``from_dict`` recurses, type-checks dicts against
+    annotations, and rejects unknown keys.
+    """
+
+    def to_dict(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, SpecBase):
+                v = v.to_dict()
+            elif isinstance(v, dict):
+                v = dict(v)
+            out[f.name] = v
+        return out
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "SpecBase":
+        if not isinstance(d, dict):
+            raise SpecError(f"{cls.__name__}: expected a dict, got "
+                            f"{type(d).__name__}")
+        hints = typing.get_type_hints(cls)
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - names
+        if unknown:
+            raise SpecError(f"{cls.__name__}: unknown field(s) "
+                            f"{sorted(unknown)}; known: {sorted(names)}")
+        kwargs: Dict[str, Any] = {}
+        for f in dataclasses.fields(cls):
+            if f.name not in d:
+                continue
+            v = d[f.name]
+            tp = _unwrap_optional(hints[f.name])
+            if isinstance(tp, type) and issubclass(tp, SpecBase) \
+                    and v is not None:
+                v = tp.from_dict(v)
+            kwargs[f.name] = v
+        return cls(**kwargs)
+
+    def replace(self, **changes) -> "SpecBase":
+        return dataclasses.replace(self, **changes)
+
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "SpecBase":
+        return cls.from_dict(json.loads(text))
+
+    # -- validation helpers --------------------------------------------
+
+    def _require(self, cond: bool, msg: str) -> None:
+        if not cond:
+            raise SpecError(f"{type(self).__name__}: {msg}")
+
+    def validate(self) -> "SpecBase":
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec(SpecBase):
+    """Which model to build: a config-registry arch + field overrides."""
+    arch: str = "paper-cnn"
+    reduced: bool = True
+    overrides: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def validate(self) -> "ModelSpec":
+        from repro.configs import _MODULES
+        self._require(self.arch in _MODULES,
+                      f"unknown arch {self.arch!r}; known: "
+                      f"{sorted(_MODULES)}")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerSpec(SpecBase):
+    """Optimizer family + hyperparameters (repro.optim)."""
+    name: str = "sgd"
+    lr: float = 5e-2
+    momentum: float = 0.9
+    weight_decay: float = 5e-4
+    kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def validate(self) -> "OptimizerSpec":
+        self._require(self.name in ("sgd", "adamw"),
+                      f"unknown optimizer {self.name!r}")
+        self._require(self.lr > 0, "lr must be positive")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerSpec(SpecBase):
+    """Paper Sec. V-B straggler injection: P(straggler) and delay range."""
+    p_straggler: float = 0.2
+    w_min: float = 100.0
+    w_max: float = 500.0
+    seed: int = 0
+
+    def validate(self) -> "StragglerSpec":
+        self._require(0.0 <= self.p_straggler <= 1.0,
+                      "p_straggler must be in [0, 1]")
+        self._require(self.w_min <= self.w_max, "w_min must be <= w_max")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec(SpecBase):
+    """Dataset synthesis + federation layout.
+
+    kind "synthetic_classification": CIFAR-like images partitioned across
+    ``num_clients`` ("iid" or extended-"dirichlet"); kind "synthetic_lm":
+    style-skewed token sequences (one shard per client).
+    """
+    kind: str = "synthetic_classification"
+    num_train: int = 3000
+    num_test: int = 600
+    image_size: int = 16
+    num_classes: int = 10
+    seed: int = 0
+    test_seed: int = 99
+    partition: str = "dirichlet"
+    num_clients: int = 8
+    classes_per_client: int = 2
+    concentration: float = 0.3
+    partition_seed: int = 1
+    straggler: Optional[StragglerSpec] = None
+    # synthetic_lm only
+    sequences: int = 2048
+    seq_len: int = 128
+
+    def validate(self) -> "DataSpec":
+        self._require(self.kind in ("synthetic_classification",
+                                    "synthetic_lm"),
+                      f"unknown data kind {self.kind!r}")
+        self._require(self.partition in ("iid", "dirichlet"),
+                      f"unknown partition {self.partition!r}")
+        self._require(self.num_clients > 0, "num_clients must be positive")
+        self._require(self.num_train > 0, "num_train must be positive")
+        if self.straggler is not None:
+            self.straggler.validate()
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerSpec(SpecBase):
+    """Global sampling policy (repro.core.sampling.make_plan arguments)."""
+    method: str = "ugs"
+    backend: str = "numpy"
+    kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def validate(self) -> "SamplerSpec":
+        self._require(self.method in ("ugs", "lds", "fpls", "fls"),
+                      f"unknown sampling method {self.method!r}")
+        self._require(self.backend in ("numpy", "jax", "auto"),
+                      f"unknown planner backend {self.backend!r}")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolSpec(SpecBase):
+    """Training protocol and its schedule.
+
+    ``name`` selects a registered strategy (repro.api.registry). ``batch_size``
+    is the per-client/local batch size of CL/SL/FL/SFL; PSL composes global
+    batches of ``global_batch_size`` slots instead.
+    """
+    name: str = "psl"
+    epochs: int = 6
+    global_batch_size: int = 64
+    batch_size: int = 64
+    aggregation: str = "global_mean"
+    local_epochs: Optional[int] = None    # FL; None = paper App. A rule
+    track_tpe: bool = False
+    base_step_ms: float = 60.0
+
+    def validate(self) -> "ProtocolSpec":
+        from repro.api.registry import available_protocols
+        self._require(self.name in available_protocols(),
+                      f"unknown protocol {self.name!r}; registered: "
+                      f"{available_protocols()}")
+        self._require(self.epochs > 0, "epochs must be positive")
+        self._require(self.global_batch_size > 0 and self.batch_size > 0,
+                      "batch sizes must be positive")
+        self._require(self.aggregation in ("global_mean", "client_weighted"),
+                      f"unknown aggregation {self.aggregation!r}")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionSpec(SpecBase):
+    """Where and how the step runs: engine, mesh, lowering, microbatches.
+
+    engine "fused" jits the fused step on the default device; "sharded"
+    lowers it through repro.launch.distributed.ShardedPSLEngine onto a
+    (data x model) mesh (``mesh`` e.g. "4x1"; None = all visible devices).
+    """
+    engine: str = "fused"
+    mesh: Optional[str] = None
+    sharding: str = "tp"
+    lowering: str = "gspmd"
+    microbatches: int = 1
+    max_steps: Optional[int] = None
+    checkpoint: Optional[str] = None
+
+    def validate(self) -> "ExecutionSpec":
+        self._require(self.engine in ("fused", "sharded"),
+                      f"unknown engine {self.engine!r}")
+        self._require(self.sharding in ("tp", "fsdp", "ddp"),
+                      f"unknown sharding profile {self.sharding!r}")
+        self._require(self.lowering in ("gspmd", "shard_map"),
+                      f"unknown lowering {self.lowering!r}")
+        self._require(self.microbatches >= 1,
+                      "microbatches must be >= 1")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalSpec(SpecBase):
+    """Held-out evaluation cadence (classification workloads)."""
+    enabled: bool = True
+    batch_size: int = 512
+    every: int = 1
+
+    def validate(self) -> "EvalSpec":
+        self._require(self.batch_size > 0, "batch_size must be positive")
+        self._require(self.every >= 1, "every must be >= 1")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec(SpecBase):
+    """The root: one experiment, fully pinned, JSON round-trippable."""
+    seed: int = 0
+    model: ModelSpec = dataclasses.field(default_factory=ModelSpec)
+    optimizer: OptimizerSpec = dataclasses.field(
+        default_factory=OptimizerSpec)
+    data: DataSpec = dataclasses.field(default_factory=DataSpec)
+    sampler: SamplerSpec = dataclasses.field(default_factory=SamplerSpec)
+    protocol: ProtocolSpec = dataclasses.field(default_factory=ProtocolSpec)
+    execution: ExecutionSpec = dataclasses.field(
+        default_factory=ExecutionSpec)
+    eval: EvalSpec = dataclasses.field(default_factory=EvalSpec)
+
+    def validate(self) -> "ExperimentSpec":
+        for sub in (self.model, self.optimizer, self.data, self.sampler,
+                    self.protocol, self.execution, self.eval):
+            sub.validate()
+        if self.data.kind == "synthetic_lm":
+            self._require(self.protocol.name == "psl",
+                          "synthetic_lm data requires the psl protocol")
+        if self.execution.engine == "sharded":
+            self._require(self.protocol.name == "psl",
+                          "the sharded engine only lowers the psl protocol")
+        return self

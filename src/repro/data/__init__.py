@@ -1,7 +1,8 @@
 """Data pipeline: synthetic datasets, federated client stores, batch builder."""
 from repro.data.synthetic import (make_classification_dataset,
                                   make_lm_dataset)
-from repro.data.federated import ClientStore, GlobalBatchIterator
+from repro.data.federated import (ClientStore, GlobalBatchIterator,
+                                  build_lm_client_store)
 
 __all__ = ["make_classification_dataset", "make_lm_dataset", "ClientStore",
-           "GlobalBatchIterator"]
+           "GlobalBatchIterator", "build_lm_client_store"]

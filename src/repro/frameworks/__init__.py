@@ -1,8 +1,13 @@
 """Training frameworks compared in the paper: CL, SL, FL, SFL, and PSL with
-pluggable global sampling (UGS / LDS / FPLS / FLS)."""
+pluggable global sampling (UGS / LDS / FPLS / FLS).
+
+Deprecated shims: the protocols live in :mod:`repro.api.protocols` and run
+through ``repro.api.run(spec)``; these entry points remain for existing
+callers."""
+from repro.api.loop import History
 from repro.frameworks.trainers import (evaluate, train_cl, train_fl,
                                        train_psl, train_psl_sharded,
                                        train_sfl, train_sl)
 
-__all__ = ["evaluate", "train_cl", "train_fl", "train_psl",
+__all__ = ["History", "evaluate", "train_cl", "train_fl", "train_psl",
            "train_psl_sharded", "train_sfl", "train_sl"]

@@ -1,94 +1,77 @@
-"""Reference implementations of the compared DDL frameworks (paper Sec. V).
+"""Legacy trainer entry points for the compared DDL frameworks (Sec. V).
 
-All trainers share the CNN/LM model API (loss_fn(params, batch), client/server
-split) and a ClientStore. They are deliberately faithful to the protocols:
+.. deprecated::
+    These six ``train_*`` functions are thin shims over the declarative
+    experiment API: each one assembles a :class:`repro.api.RunContext`
+    from its (model, optimizer, data) arguments and drives the registered
+    protocol strategy through the shared loop (``repro.api.loop.fit``).
+    New code should build an :class:`repro.api.ExperimentSpec` and call
+    ``repro.api.run(spec)`` instead — same trajectories, one JSON document
+    per experiment. The protocols themselves live in
+    :mod:`repro.api.protocols`:
 
-  * CL   — central learning on the pooled dataset (upper baseline).
-  * SL   — sequential split learning: one client at a time trains with the
-           server; client weights hop to the next client.
-  * FL   — FedAvg: local epochs on full model copies; size-weighted average.
-  * SFL  — SplitFed: clients train client-segments in parallel against a
-           shared server segment; client segments are FedAvg'd every round.
-  * PSL  — parallel split learning, batch composition from an EpochPlan
-           (UGS / LDS / FPLS / FLS via repro.core.sampling).
+      * CL   — central learning on the pooled dataset (upper baseline).
+      * SL   — sequential split learning (weights hop client to client).
+      * FL   — FedAvg (size-weighted average of local models).
+      * SFL  — SplitFed (parallel client segments, shared server segment).
+      * PSL  — parallel split learning from an EpochPlan (UGS/LDS/FPLS/FLS),
+               fused single-device or sharded onto a (data × model) mesh.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import sampling as sampling_lib
-from repro.core.types import ClientPopulation
-from repro.data.federated import ClientStore, GlobalBatchIterator
-from repro.optim import TrainState, apply_updates
-from repro.core.psl import make_train_step
+from repro.api import events as events_lib
+from repro.api.evaluation import batch_from as _batch_from  # noqa: F401
+from repro.api.evaluation import evaluate
+from repro.api.loop import DataBundle, History, RunContext, fit
+from repro.api.registry import get_protocol
+from repro.api.specs import (EvalSpec, ExecutionSpec, ExperimentSpec,
+                             ProtocolSpec, SamplerSpec)
+from repro.data.federated import ClientStore
 
 
-def _batch_from(features, labels, weights=None):
-    b = {"labels": jnp.asarray(labels, jnp.int32),
-         "weights": jnp.asarray(
-             np.ones(len(labels), np.float32) if weights is None
-             else weights)}
-    b["images"] = jnp.asarray(features)
-    return b
+def _shim_spec(protocol: str, *, epochs: int, batch_size: int = 64,
+               global_batch_size: int = 64, method: str = "ugs",
+               aggregation: str = "global_mean",
+               sampler_kwargs: Optional[dict] = None,
+               planner_backend: str = "numpy",
+               local_epochs: Optional[int] = None,
+               track_tpe: bool = False, base_step_ms: float = 60.0,
+               engine: str = "fused", sharding: str = "tp",
+               lowering: str = "gspmd", microbatches: int = 1
+               ) -> ExperimentSpec:
+    """Spec carrying the legacy kwargs; model/optimizer/data stay objects."""
+    return ExperimentSpec(
+        protocol=ProtocolSpec(name=protocol, epochs=epochs,
+                              batch_size=batch_size,
+                              global_batch_size=global_batch_size,
+                              aggregation=aggregation,
+                              local_epochs=local_epochs,
+                              track_tpe=track_tpe,
+                              base_step_ms=base_step_ms),
+        sampler=SamplerSpec(method=method, backend=planner_backend,
+                            kwargs=dict(sampler_kwargs or {})),
+        execution=ExecutionSpec(engine=engine, sharding=sharding,
+                                lowering=lowering,
+                                microbatches=microbatches),
+        eval=EvalSpec())
 
 
-def evaluate(model, params, features: np.ndarray, labels: np.ndarray,
-             batch_size: int = 512) -> float:
-    correct = 0
-    predict = jax.jit(model.predict)
-    for i in range(0, len(features), batch_size):
-        logits = predict(params, jnp.asarray(features[i:i + batch_size]))
-        correct += int((np.asarray(logits).argmax(-1)
-                        == labels[i:i + batch_size]).sum())
-    return correct / len(features)
+def _fit(model, optimizer, data: DataBundle, spec: ExperimentSpec,
+         seed: int, extra_callbacks=(), mesh=None) -> History:
+    ctx = RunContext(model=model, optimizer=optimizer, data=data,
+                     spec=spec, seed=seed, mesh=mesh)
+    callbacks = [events_lib.EvalCallback()] + list(extra_callbacks)
+    return fit(ctx, get_protocol(spec.protocol.name)(), callbacks).history
 
-
-@dataclasses.dataclass
-class History:
-    test_acc: List[float]
-    extras: Dict[str, Any]
-
-    @property
-    def best(self) -> float:
-        return max(self.test_acc) if self.test_acc else 0.0
-
-
-def _epoch_eval(model, state, test, hist):
-    acc = evaluate(model, state.params, *test)
-    hist.append(acc)
-    return acc
-
-
-# ---------------------------------------------------------------------------
-# Central learning
-# ---------------------------------------------------------------------------
 
 def train_cl(model, optimizer, features, labels, test, *, epochs: int,
              batch_size: int, seed: int = 0) -> History:
-    step = jax.jit(make_train_step(model, optimizer))
-    params = model.init(jax.random.PRNGKey(seed))
-    state = TrainState(params, optimizer.init(params),
-                       jnp.zeros((), jnp.int32))
-    rng = np.random.default_rng(seed)
-    hist: List[float] = []
-    n = len(features)
-    for _ in range(epochs):
-        order = rng.permutation(n)
-        for i in range(0, n - batch_size + 1, batch_size):
-            idx = order[i:i + batch_size]
-            state, _ = step(state, _batch_from(features[idx], labels[idx]))
-        _epoch_eval(model, state, test, hist)
-    return History(hist, {})
+    spec = _shim_spec("cl", epochs=epochs, batch_size=batch_size)
+    data = DataBundle(train=(features, labels), test=test)
+    return _fit(model, optimizer, data, spec, seed)
 
-
-# ---------------------------------------------------------------------------
-# Parallel Split Learning (the paper's framework + our samplers)
-# ---------------------------------------------------------------------------
 
 def train_psl(model, optimizer, store: ClientStore, test, *, epochs: int,
               global_batch_size: int, method: str = "ugs",
@@ -97,36 +80,21 @@ def train_psl(model, optimizer, store: ClientStore, test, *, epochs: int,
               planner_backend: str = "numpy",
               track_tpe: bool = False, base_step_ms: float = 60.0
               ) -> History:
-    """PSL training loop. ``planner_backend`` selects the epoch-plan engine:
-    "numpy" (default — the exact reference, seed-for-seed reproducible
-    against published runs), "jax" (vectorized engine, different PRNG), or
-    "auto" (jax for large K). Opt into "jax"/"auto" for large federations;
-    plans then match the reference in distribution but not draw-for-draw.
-    """
-    from repro.core.straggler import simulate_tpe
-    step = jax.jit(make_train_step(model, optimizer))
-    params = model.init(jax.random.PRNGKey(seed))
-    state = TrainState(params, optimizer.init(params),
-                       jnp.zeros((), jnp.int32))
-    hist: List[float] = []
-    tpes: List[float] = []
-    em_iters = 0
-    for e in range(epochs):
-        plan = sampling_lib.make_plan(method, store.population,
-                                      global_batch_size, seed=seed + e,
-                                      backend=planner_backend,
-                                      **(sampler_kwargs or {}))
-        em_iters += plan.em_iterations
-        if track_tpe:
-            tpes.append(simulate_tpe(plan.local_batch_sizes,
-                                     store.population.delays,
-                                     base_step_ms=base_step_ms).total_ms)
-        for gb in GlobalBatchIterator(store, plan, aggregation,
-                                      seed=seed * 1000 + e):
-            state, _ = step(state, _batch_from(gb["features"], gb["labels"],
-                                               gb["weights"]))
-        _epoch_eval(model, state, test, hist)
-    return History(hist, {"tpe_ms": tpes, "em_iterations": em_iters})
+    """PSL training loop (shim). ``planner_backend`` selects the epoch-plan
+    engine: "numpy" (default — the exact reference, seed-for-seed
+    reproducible against published runs), "jax" (vectorized engine,
+    different PRNG), or "auto" (jax for large K)."""
+    spec = _shim_spec("psl", epochs=epochs,
+                      global_batch_size=global_batch_size, method=method,
+                      aggregation=aggregation,
+                      sampler_kwargs=sampler_kwargs,
+                      planner_backend=planner_backend, track_tpe=track_tpe,
+                      base_step_ms=base_step_ms)
+    data = DataBundle.from_store(store, test=test)
+    cbs = [events_lib.PlanStatsCallback(),
+           events_lib.StragglerTPECallback(base_step_ms=base_step_ms,
+                                           track=track_tpe)]
+    return _fit(model, optimizer, data, spec, seed, cbs)
 
 
 def train_psl_sharded(model, optimizer, store: ClientStore, test, *,
@@ -139,159 +107,48 @@ def train_psl_sharded(model, optimizer, store: ClientStore, test, *,
                       lowering: str = "gspmd", microbatches: int = 1,
                       track_tpe: bool = False, base_step_ms: float = 60.0
                       ) -> History:
-    """PSL training with the fused step lowered onto a (data × model) mesh.
+    """PSL with the fused step lowered onto a (data × model) mesh (shim).
 
     Same protocol as :func:`train_psl` — identical plans, batches, and
     aggregation weights — but the step runs through
-    ``repro.launch.distributed.ShardedPSLEngine``: client params replicated
-    per data shard, server params sharded per ``profile``, the global batch
-    sharded on its leading axis, and optional microbatch gradient
-    accumulation. With ``track_tpe`` the straggler accounting uses the
-    per-shard arrival model (clients reach their home shard independently),
-    recording both epoch TPE and the per-step shard arrival skew.
+    ``repro.launch.distributed.ShardedPSLEngine``, and with ``track_tpe``
+    the straggler accounting uses the per-shard arrival model.
     """
-    from repro.launch.distributed import (ShardedPSLEngine,
-                                          assign_clients_to_shards,
-                                          step_timing)
-    engine = ShardedPSLEngine(model, optimizer, mesh=mesh, profile=profile,
-                              lowering=lowering, microbatches=microbatches)
-    state = engine.init_state(seed)
-    shard_of_client = assign_clients_to_shards(store.num_clients,
-                                               engine.num_shards)
-    hist: List[float] = []
-    tpes: List[float] = []
-    skews: List[float] = []
-    em_iters = 0
-    for e in range(epochs):
-        plan = sampling_lib.make_plan(method, store.population,
-                                      global_batch_size, seed=seed + e,
-                                      backend=planner_backend,
-                                      **(sampler_kwargs or {}))
-        em_iters += plan.em_iterations
-        epoch_ms = 0.0
-        for gb in GlobalBatchIterator(store, plan, aggregation,
-                                      seed=seed * 1000 + e,
-                                      num_shards=engine.num_shards):
-            if track_tpe:
-                tm = step_timing(plan.local_batch_sizes[gb["step"]],
-                                 store.population.delays, shard_of_client,
-                                 engine.num_shards,
-                                 base_step_ms=base_step_ms)
-                epoch_ms += tm.step_ms
-                skews.append(tm.shard_skew_ms)
-            batch = engine.put_batch({       # host numpy → one sharded put
-                "images": np.asarray(gb["features"], np.float32),
-                "labels": np.asarray(gb["labels"], np.int32),
-                "weights": np.asarray(gb["weights"], np.float32)})
-            state, _ = engine.step(state, batch)
-        if track_tpe:
-            tpes.append(epoch_ms)
-        _epoch_eval(model, state, test, hist)
-    return History(hist, {"tpe_ms": tpes, "em_iterations": em_iters,
-                          "shard_skew_ms": skews,
-                          "sharding_fallbacks": engine.report.fallbacks})
+    spec = _shim_spec("psl", epochs=epochs,
+                      global_batch_size=global_batch_size, method=method,
+                      aggregation=aggregation,
+                      sampler_kwargs=sampler_kwargs,
+                      planner_backend=planner_backend, track_tpe=track_tpe,
+                      base_step_ms=base_step_ms, engine="sharded",
+                      sharding=profile, lowering=lowering,
+                      microbatches=microbatches)
+    data = DataBundle.from_store(store, test=test)
+    cbs = [events_lib.PlanStatsCallback(),
+           events_lib.ShardArrivalCallback(track=track_tpe)]
+    return _fit(model, optimizer, data, spec, seed, cbs, mesh=mesh)
 
-
-# ---------------------------------------------------------------------------
-# Sequential Split Learning
-# ---------------------------------------------------------------------------
 
 def train_sl(model, optimizer, store: ClientStore, test, *, epochs: int,
              batch_size: int, seed: int = 0) -> History:
-    step = jax.jit(make_train_step(model, optimizer))
-    params = model.init(jax.random.PRNGKey(seed))
-    state = TrainState(params, optimizer.init(params),
-                       jnp.zeros((), jnp.int32))
-    rng = np.random.default_rng(seed)
-    hist: List[float] = []
-    for _ in range(epochs):
-        for k in rng.permutation(store.num_clients):
-            feats, labs = store.features[k], store.labels[k]
-            order = rng.permutation(len(feats))
-            bs = min(batch_size, len(feats))
-            for i in range(0, len(feats) - bs + 1, bs):
-                idx = order[i:i + bs]
-                state, _ = step(state, _batch_from(feats[idx], labs[idx]))
-        _epoch_eval(model, state, test, hist)
-    return History(hist, {})
-
-
-# ---------------------------------------------------------------------------
-# Federated learning (FedAvg)
-# ---------------------------------------------------------------------------
-
-def _tree_weighted_sum(trees, weights):
-    return jax.tree_util.tree_map(
-        lambda *xs: sum(w * x.astype(jnp.float32) for w, x in
-                        zip(weights, xs)).astype(xs[0].dtype), *trees)
+    spec = _shim_spec("sl", epochs=epochs, batch_size=batch_size)
+    data = DataBundle.from_store(store, test=test)
+    return _fit(model, optimizer, data, spec, seed)
 
 
 def train_fl(model, optimizer, store: ClientStore, test, *, epochs: int,
              batch_size: int, local_epochs: Optional[int] = None,
              seed: int = 0) -> History:
-    k = store.num_clients
-    if local_epochs is None:
-        local_epochs = max(1, int(np.log2(k)) - 1)   # paper App. A
-    step = jax.jit(make_train_step(model, optimizer))
-    global_params = model.init(jax.random.PRNGKey(seed))
-    rng = np.random.default_rng(seed)
-    hist: List[float] = []
-    sizes = store.population.dataset_sizes.astype(np.float64)
-    wk = sizes / sizes.sum()
-    for _ in range(epochs):
-        locals_ = []
-        for ki in range(k):
-            st = TrainState(global_params, optimizer.init(global_params),
-                            jnp.zeros((), jnp.int32))
-            feats, labs = store.features[ki], store.labels[ki]
-            bs = min(batch_size, len(feats))
-            for _le in range(local_epochs):
-                order = rng.permutation(len(feats))
-                for i in range(0, len(feats) - bs + 1, bs):
-                    idx = order[i:i + bs]
-                    st, _ = step(st, _batch_from(feats[idx], labs[idx]))
-            locals_.append(st.params)
-        global_params = _tree_weighted_sum(locals_, wk)
-        st_eval = TrainState(global_params, None, None)
-        _epoch_eval(model, st_eval, test, hist)
-    return History(hist, {})
+    spec = _shim_spec("fl", epochs=epochs, batch_size=batch_size,
+                      local_epochs=local_epochs)
+    data = DataBundle.from_store(store, test=test)
+    return _fit(model, optimizer, data, spec, seed)
 
-
-# ---------------------------------------------------------------------------
-# SplitFed learning
-# ---------------------------------------------------------------------------
 
 def train_sfl(model, optimizer, store: ClientStore, test, *, epochs: int,
               batch_size: int, seed: int = 0) -> History:
-    """SplitFed-V1: per round each client runs its local batches against the
-    shared server segment (server updates every batch); client segments are
-    FedAvg'd at the end of the round."""
-    k = store.num_clients
-    step = jax.jit(make_train_step(model, optimizer))
-    params = model.init(jax.random.PRNGKey(seed))
-    rng = np.random.default_rng(seed)
-    sizes = store.population.dataset_sizes.astype(np.float64)
-    wk = sizes / sizes.sum()
-    hist: List[float] = []
-    for _ in range(epochs):
-        client_params = []
-        server_side = params["server"]
-        for ki in range(k):
-            st = TrainState({"client": params["client"],
-                             "server": server_side},
-                            optimizer.init({"client": params["client"],
-                                            "server": server_side}),
-                            jnp.zeros((), jnp.int32))
-            feats, labs = store.features[ki], store.labels[ki]
-            bs = min(batch_size, len(feats))
-            order = rng.permutation(len(feats))
-            for i in range(0, len(feats) - bs + 1, bs):
-                idx = order[i:i + bs]
-                st, _ = step(st, _batch_from(feats[idx], labs[idx]))
-            client_params.append(st.params["client"])
-            server_side = st.params["server"]
-        params = {"client": _tree_weighted_sum(client_params, wk),
-                  "server": server_side}
-        st_eval = TrainState(params, None, None)
-        _epoch_eval(model, st_eval, test, hist)
-    return History(hist, {})
+    """SplitFed-V1 (shim): per round each client runs its local batches
+    against the shared server segment; client segments are FedAvg'd at the
+    end of the round."""
+    spec = _shim_spec("sfl", epochs=epochs, batch_size=batch_size)
+    data = DataBundle.from_store(store, test=test)
+    return _fit(model, optimizer, data, spec, seed)

@@ -1,71 +1,56 @@
-"""End-to-end PSL training driver (runs on real devices: CPU here, TPU pod
-with the production mesh in deployment).
+"""End-to-end PSL training CLI — a thin shell over ``repro.api.run``.
 
-Wires together: config registry → model → sharded train step → UGS/LDS epoch
-plans → the plan-driven LM data pipeline → checkpointing. Used by
-``examples/train_transformer.py`` and the integration tests.
+The experiment is one :class:`repro.api.ExperimentSpec`; the CLI loads it
+from ``--config spec.json``, applies dotted ``--set key=value`` overrides,
+and hands it to the runner (spec → model/data/engine → shared loop). A few
+legacy convenience flags (``--arch``, ``--steps``, ``--mesh``, …) map onto
+spec overrides so existing invocations keep working.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b --reduced \
       --steps 100 --global-batch 16 --seq-len 128 --method ugs
+  PYTHONPATH=src python -m repro.launch.train --config spec.json \
+      --set sampler.method=lds --set sampler.kwargs.delta=1.5
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import json
 import time
-from typing import Any, Dict, Optional
+from typing import List
 
 import jax
 import numpy as np
 
-from repro import optim as optim_lib
-from repro.checkpoint import restore, save
-from repro.configs import get_config
-from repro.core import sampling as sampling_lib
-from repro.core.psl import slot_weights
-from repro.core.types import ClientPopulation
-from repro.data.synthetic import make_lm_dataset
-from repro.launch.mesh import make_host_mesh, make_training_mesh
-from repro.models import build_model
+from repro import api
+from repro.data.federated import build_lm_client_store as _build_lm_store
 from repro.optim import TrainState
 
 
 def build_lm_client_store(cfg, num_clients: int, sequences: int,
                           seq_len: int, seed: int = 0):
-    """Non-IID LM federation: clients get style-skewed sequence sets."""
-    toks, styles = make_lm_dataset(sequences, seq_len + 1, cfg.vocab_size,
-                                   num_styles=max(2, num_clients // 2),
-                                   seed=seed)
-    rng = np.random.default_rng(seed)
-    # each client holds 1-2 styles (non-IID over sequence styles)
-    order = np.argsort(styles, kind="stable")
-    parts = np.array_split(order, num_clients)
-    class_counts = np.zeros((num_clients, styles.max() + 1), np.int64)
-    for k, p in enumerate(parts):
-        class_counts[k] = np.bincount(styles[p], minlength=styles.max() + 1)
-    pop = ClientPopulation(dataset_sizes=np.array([len(p) for p in parts]),
-                           class_counts=class_counts,
-                           delays=np.zeros(num_clients))
-    data = [toks[p] for p in parts]
-    return data, pop
+    """Deprecated: use repro.data.federated.build_lm_client_store."""
+    return _build_lm_store(cfg.vocab_size, num_clients, sequences, seq_len,
+                           seed=seed)
 
 
 class PSLTrainer:
     """Sharded PSL trainer over an arbitrary (data × model) mesh.
 
-    A thin epoch driver around ``repro.launch.distributed.ShardedPSLEngine``
-    — the engine owns the lowering (gspmd profile shardings or explicit
-    shard_map data parallelism), batch placement, microbatching, and
-    TrainState donation; this class owns the plan-driven LM batch assembly.
+    Deprecated epoch-level driver kept for existing callers: the engine
+    lowering lives in ``repro.launch.distributed.ShardedPSLEngine`` and
+    the plan-driven LM batch assembly in
+    ``repro.api.protocols.lm_plan_batches`` — the same pieces the "psl"
+    strategy composes when ``repro.api.run`` executes an LM spec.
     """
 
     def __init__(self, cfg, optimizer=None, mesh=None,
                  aggregation: str = "global_mean", profile: str = "tp",
                  lowering: str = "gspmd", microbatches: int = 1):
+        from repro import optim as optim_lib
         from repro.launch.distributed import (ShardedPSLEngine,
                                               assign_clients_to_shards)
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import build_model
         self.cfg = cfg
         self.model = build_model(cfg)
         self.optimizer = optimizer or optim_lib.adamw(1e-3)
@@ -82,141 +67,156 @@ class PSLTrainer:
         return self.engine.init_state(seed)
 
     def train_epoch(self, state: TrainState, data, pop, plan,
-                    seq_len: int, seed: int = 0,
-                    max_steps: Optional[int] = None):
+                    seq_len: int, seed: int = 0, max_steps=None):
         """One PSL epoch from an EpochPlan over per-client token arrays."""
-        rng = np.random.default_rng(seed)
-        orders = [rng.permutation(len(d)) for d in data]
-        cursors = np.zeros(len(data), np.int64)
-        metrics_hist = []
-        b = plan.global_batch_size
+        from repro.api.protocols import lm_plan_batches
         shard_of_client = self._assign(len(data), self.engine.num_shards)
-        for t in range(plan.num_steps):
+        metrics_hist = []
+        for t, host in enumerate(lm_plan_batches(
+                data, pop, plan, seq_len, self.aggregation,
+                shard_of_client, seed=seed)):
             if max_steps is not None and t >= max_steps:
                 break
-            sizes = plan.local_batch_sizes[t]
-            rows, ids = [], []
-            # visit clients grouped by home shard so the leading-axis
-            # split sends each shard (mostly) its own clients' slots
-            for k in np.argsort(shard_of_client, kind="stable"):
-                n = int(sizes[k])
-                if n == 0:
-                    continue
-                idx = orders[k][cursors[k]:cursors[k] + n]
-                cursors[k] += n
-                rows.append(data[k][idx])
-                ids.append(np.full(n, k))
-            toks = np.concatenate(rows)
-            cids = np.concatenate(ids)
-            if toks.shape[0] < b:
-                pad = b - toks.shape[0]
-                toks = np.concatenate(
-                    [toks, np.zeros((pad, toks.shape[1]), toks.dtype)])
-                cids = np.concatenate([cids, np.full(pad, -1)])
-            w = slot_weights(cids, sizes, pop.dataset_sizes,
-                             self.aggregation)
-            batch = self.engine.put_batch({
-                "tokens": toks[:, :seq_len].astype(np.int32),
-                "labels": toks[:, 1:seq_len + 1].astype(np.int32),
-                "weights": np.repeat(w[:, None], seq_len, 1),
-            })
-            state, metrics = self.engine.step(state, batch)
+            state, metrics = self.engine.step(state,
+                                              self.engine.put_batch(host))
             metrics_hist.append(
                 {k: float(v) for k, v in metrics.items()})
         return state, metrics_hist
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="granite-3-2b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--epochs", type=int, default=1)
-    ap.add_argument("--global-batch", type=int, default=16)
-    ap.add_argument("--seq-len", type=int, default=128)
-    ap.add_argument("--clients", type=int, default=8)
-    ap.add_argument("--sequences", type=int, default=2048)
-    ap.add_argument("--method", default="ugs",
+def default_lm_spec() -> api.ExperimentSpec:
+    """The CLI's baseline spec: reduced-friendly LM PSL on the host mesh."""
+    return api.ExperimentSpec(
+        model=api.ModelSpec(arch="granite-3-2b", reduced=False),
+        optimizer=api.OptimizerSpec(name="adamw", lr=1e-3,
+                                    weight_decay=0.1),
+        data=api.DataSpec(kind="synthetic_lm", num_clients=8,
+                          sequences=2048, seq_len=128),
+        sampler=api.SamplerSpec(method="ugs"),
+        protocol=api.ProtocolSpec(name="psl", epochs=1,
+                                  global_batch_size=16),
+        execution=api.ExecutionSpec(engine="sharded", max_steps=50),
+        eval=api.EvalSpec(enabled=False))
+
+
+def _legacy_overrides(args) -> List[str]:
+    """Map the convenience flags onto dotted spec overrides."""
+    sets: List[str] = []
+
+    def add(key, value):
+        # bare strings hit parse_set's plain-string fallback; numbers and
+        # booleans round-trip through its JSON parse
+        if value is not None:
+            sets.append(f"{key}={value}")
+
+    add("model.arch", args.arch)
+    if args.reduced is not None:        # tri-state: --reduced/--no-reduced
+        add("model.reduced", "true" if args.reduced else "false")
+    add("execution.max_steps", args.steps)
+    add("protocol.epochs", args.epochs)
+    add("protocol.global_batch_size", args.global_batch)
+    add("data.seq_len", args.seq_len)
+    add("data.num_clients", args.clients)
+    add("data.sequences", args.sequences)
+    add("sampler.method", args.method)
+    add("sampler.backend", args.planner_backend)
+    add("protocol.aggregation", args.aggregation)
+    add("execution.mesh", args.mesh)
+    add("execution.sharding", args.sharding)
+    add("execution.lowering", args.lowering)
+    add("execution.microbatches", args.microbatches)
+    add("optimizer.lr", args.lr)
+    add("execution.checkpoint", args.checkpoint)
+    add("seed", args.seed)
+    add("data.seed", args.seed)
+    if args.d_model:
+        add("model.overrides.d_model", args.d_model)
+        add("model.overrides.num_heads", max(4, args.d_model // 64))
+        add("model.overrides.num_kv_heads", max(2, args.d_model // 128))
+        add("model.overrides.d_ff", args.d_model * 4)
+    if args.layers:
+        add("model.overrides.num_layers", args.layers)
+    return sets
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default=None, metavar="SPEC_JSON",
+                    help="ExperimentSpec JSON file (see docs/api.md)")
+    ap.add_argument("--set", action="append", default=[], metavar="K=V",
+                    dest="sets",
+                    help="dotted spec override, e.g. protocol.epochs=2 or "
+                         "sampler.kwargs.delta=1.5 (repeatable)")
+    ap.add_argument("--print-spec", action="store_true",
+                    help="print the resolved spec JSON and exit")
+    # legacy convenience flags (all map onto --set overrides)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=None)
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--epochs", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--clients", type=int, default=None)
+    ap.add_argument("--sequences", type=int, default=None)
+    ap.add_argument("--method", default=None,
                     choices=["ugs", "lds", "fpls", "fls"])
-    ap.add_argument("--planner-backend", default="numpy",
+    ap.add_argument("--planner-backend", default=None,
                     choices=["numpy", "jax", "auto"],
                     help="epoch-plan engine: numpy reference (default; "
-                         "seed-for-seed reproducible), vectorized jax "
-                         "(repro.core.planner; same distribution, "
-                         "different PRNG), or auto (jax for large client "
-                         "counts)")
-    ap.add_argument("--aggregation", default="global_mean")
+                         "seed-for-seed reproducible), vectorized jax, or "
+                         "auto (jax for large client counts)")
+    ap.add_argument("--aggregation", default=None)
     ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
                     help="(data × model) mesh for the sharded engine, e.g. "
                          "'4x1' or '2x2'; default: one data axis over all "
                          "visible devices. On CPU, force host devices with "
-                         "XLA_FLAGS=--xla_force_host_platform_device_count=N "
-                         "before launch (docs/training.md)")
-    ap.add_argument("--sharding", default="tp",
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=N before launch (docs/training.md)")
+    ap.add_argument("--sharding", default=None,
                     choices=["tp", "fsdp", "ddp"],
                     help="server-segment sharding profile")
-    ap.add_argument("--lowering", default="gspmd",
+    ap.add_argument("--lowering", default=None,
                     choices=["gspmd", "shard_map"],
                     help="gspmd: jit with profile shardings (production); "
                          "shard_map: explicit data-parallel program "
                          "(equivalence/diagnostics; use a Dx1 mesh)")
-    ap.add_argument("--microbatches", type=int, default=1,
+    ap.add_argument("--microbatches", type=int, default=None,
                     help="gradient-accumulation slices of the global batch")
-    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--d-model", type=int, default=None,
                     help="override d_model (e.g. ~100M-param presets)")
     ap.add_argument("--layers", type=int, default=None)
     ap.add_argument("--checkpoint", default=None)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    ap.add_argument("--seed", type=int, default=None)
+    args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, reduced=args.reduced)
-    over: Dict[str, Any] = {"max_seq_len": max(args.seq_len, 256)}
-    if args.d_model:
-        over.update(d_model=args.d_model,
-                    num_heads=max(4, args.d_model // 64),
-                    num_kv_heads=max(2, args.d_model // 128),
-                    d_ff=args.d_model * 4)
-    if args.layers:
-        over["num_layers"] = args.layers
-    cfg = dataclasses.replace(cfg, **over)
+    spec = (api.load_spec(args.config) if args.config
+            else default_lm_spec())
+    spec = api.apply_overrides(spec, _legacy_overrides(args) + args.sets)
+    if args.print_spec:
+        print(spec.to_json())
+        return
 
-    mesh = make_training_mesh(args.mesh) if args.mesh else make_host_mesh()
-    trainer = PSLTrainer(cfg, optim_lib.adamw(args.lr), mesh=mesh,
-                         aggregation=args.aggregation,
-                         profile=args.sharding, lowering=args.lowering,
-                         microbatches=args.microbatches)
-    state = trainer.init_state(args.seed)
-    if trainer.report.fallbacks:
-        print("sharding fallbacks:", "; ".join(trainer.report.fallbacks))
-    data, pop = build_lm_client_store(cfg, args.clients, args.sequences,
-                                      args.seq_len, seed=args.seed)
+    ctx = api.build_context(spec)
+    shapes = jax.eval_shape(ctx.model.init, jax.random.PRNGKey(spec.seed))
     n_params = sum(int(np.prod(x.shape)) for x in
-                   jax.tree_util.tree_leaves(state.params))
-    print(f"arch={cfg.name} params={n_params/1e6:.1f}M clients={pop.num_clients} "
-          f"D0={pop.total_size} method={args.method}")
-
-    done = 0
-    for epoch in range(args.epochs):
-        plan = sampling_lib.make_plan(args.method, pop, args.global_batch,
-                                      seed=args.seed + epoch,
-                                      backend=args.planner_backend)
-        t0 = time.time()
-        state, hist = trainer.train_epoch(
-            state, data, pop, plan, args.seq_len, seed=args.seed + epoch,
-            max_steps=args.steps - done)
-        done += len(hist)
-        for i, m in enumerate(hist):
-            if i % 10 == 0 or i == len(hist) - 1:
-                print(f"  epoch {epoch} step {i:4d} loss={m['loss']:.4f} "
-                      f"acc={m['accuracy']:.3f} gnorm={m['grad_norm']:.2f}")
-        print(f"epoch {epoch}: {len(hist)} steps in {time.time()-t0:.1f}s "
-              f"(final loss {hist[-1]['loss']:.4f})")
-        if done >= args.steps:
-            break
-    if args.checkpoint:
-        save(args.checkpoint, state.params)
-        print("checkpoint saved to", args.checkpoint)
+                   jax.tree_util.tree_leaves(shapes))
+    print(f"arch={ctx.model.cfg.name} params={n_params/1e6:.1f}M "
+          f"clients={ctx.data.pop.num_clients} "
+          f"D0={ctx.data.pop.total_size} method={spec.sampler.method}")
+    t0 = time.time()
+    result = api.run(spec, callbacks=[api.ConsoleLogger(every=10)],
+                     ctx=ctx)
+    fallbacks = result.history.extras.get("sharding_fallbacks")
+    if fallbacks:
+        print("sharding fallbacks:", "; ".join(fallbacks))
+    steps = len(result.step_metrics)
+    if steps:
+        print(f"{steps} steps in {time.time() - t0:.1f}s "
+              f"(final loss {result.step_metrics[-1]['loss']:.4f})")
+    if spec.execution.checkpoint:
+        print("checkpoint saved to", spec.execution.checkpoint)
 
 
 if __name__ == "__main__":
