@@ -1,21 +1,29 @@
 #!/usr/bin/env python
-"""Static vs continuous-batching serving throughput → BENCH_serve.json.
+"""Static vs continuous serving throughput as a ServeSpec sweep →
+BENCH_serve.json.
 
-Replays the same mixed-length request trace through both engines:
+One base :class:`repro.api.ServeSpec` (the built-in default, or a
+``--config serve.json`` file) is swept over queue depths with dotted
+overrides — per scenario the same seeded mixed-length trace replays
+through both registered engines:
 
-* **static** — launch.serve.BatchedServer: one batch, every request padded
-  to the max prompt length and decoded to the max output length;
-* **continuous** — repro.runtime: fixed decode token budget, slot-pooled KV
-  cache, requests admitted/retired mid-flight.
+* **static** — ``engine.name=static`` (repro.runtime.static.BatchedServer):
+  one batch, every request padded to the max prompt length and decoded to
+  the max output length;
+* **continuous** — ``engine.name=continuous`` (repro.runtime): fixed decode
+  token budget, slot-pooled KV cache, requests admitted/retired mid-flight.
 
-Each engine gets one untimed warmup pass (compile cache) before the timed
-pass. ``--verify N`` additionally checks that the continuous engine's greedy
-outputs are token-identical to single-request decoding for N requests of the
-largest scenario (all of them with ``--verify -1``).
+Each engine gets one untimed warmup pass (compile cache, engine reused via
+a prebuilt ServeContext) before two timed passes (best-of-2). ``--verify N``
+additionally checks that the continuous engine's greedy outputs are
+token-identical to single-request decoding for N requests of the largest
+scenario (all of them with ``--verify -1``).
 
 Usage:
   PYTHONPATH=src python benchmarks/serve_throughput.py            # full
   PYTHONPATH=src python benchmarks/serve_throughput.py --smoke    # CI
+  PYTHONPATH=src python benchmarks/serve_throughput.py \
+      --config serve.json --smoke                    # spec-driven base
 """
 from __future__ import annotations
 
@@ -23,20 +31,11 @@ import argparse
 import json
 import pathlib
 import sys
-import time
-
-import numpy as np
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
                        / "src"))
 
-import jax                                                 # noqa: E402
-
-from repro.configs import get_config                       # noqa: E402
-from repro.launch.serve import BatchedServer, Request      # noqa: E402
-from repro.models import build_model                       # noqa: E402
-from repro.runtime import (ContinuousEngine, Scheduler,    # noqa: E402
-                           ServeRequest, reference_generate)
+from repro import api                                      # noqa: E402
 
 # Mixed-length workload: short chat-style turns dominate, with a long tail
 # of big completions — the regime where static batching pays max×max for
@@ -47,67 +46,70 @@ SMOKE_PROMPT_LENS = [4, 8]
 SMOKE_MAX_NEWS = [2, 6]
 
 
-def make_trace(n: int, prompt_lens, max_news, vocab: int, seed: int):
-    rng = np.random.default_rng(seed)
-    trace = []
-    for i in range(n):
-        plen = int(rng.choice(prompt_lens))
-        trace.append((rng.integers(0, vocab, plen).astype(np.int32),
-                      int(rng.choice(max_news))))
-    return trace
+def scenario_spec(base: api.ServeSpec, engine: str, n: int, budget: int,
+                  seed: int) -> api.ServeSpec:
+    """One sweep cell: the base spec at queue depth ``n``."""
+    return api.apply_overrides(base, [
+        f"engine.name={engine}",
+        f"workload.num_requests={n}",
+        f"workload.seed={seed + n}",
+        f"admission.token_budget={budget}",
+        "report.verify=0",          # verification runs once, post-sweep
+    ])
 
 
-def run_static(cfg, params, trace, seed: int):
-    server = BatchedServer(cfg, params=params, seed=seed)
+def best_of_2(spec: api.ServeSpec):
+    """Warmup + two timed passes on one engine; returns (ctx, best report).
 
-    def once():
-        reqs = [Request(rid=i, prompt=p, max_new_tokens=m)
-                for i, (p, m) in enumerate(trace)]
-        t0 = time.perf_counter()
-        out = server.generate(reqs)
-        return time.perf_counter() - t0, out
-
-    once()                                   # warmup (compile cache)
-    # best-of-2 steady-state wall (the common.py jit-measurement convention)
-    wall, out = min((once() for _ in range(2)), key=lambda t: t[0])
-    new_tokens = sum(len(r.generated) for r in out)
-    max_new = max(m for _, m in trace)
-    return {"engine": "static", "arch": cfg.name, "wall_s": round(wall, 4),
-            "num_requests": len(out),
-            "prefill_tokens": len(out) * max(len(p) for p, _ in trace),
-            # first token comes from prefill; every row then rides all
-            # max_new - 1 decode steps whether finished or not
-            "decode_tokens": len(out) * (max_new - 1),
-            "emitted_tokens": new_tokens,
-            "steps": max_new - 1,
-            "requests_per_s": round(len(out) / wall, 2),
-            "decode_tok_per_s": round(new_tokens / wall, 2)}
+    The engine (and its compiled prefill/decode functions) is built once
+    through build_serve_context and reused, so the timed passes measure
+    steady-state serving, not retracing.
+    """
+    ctx = api.build_serve_context(spec)
+    if hasattr(ctx.engine, "warm"):
+        ctx.engine.warm(spec.workload.prompt_lens)
+    api.run_serve(spec, ctx=ctx)             # warmup (compile cache)
+    report = min((api.run_serve(spec, ctx=ctx) for _ in range(2)),
+                 key=lambda r: r.wall_s)
+    if hasattr(ctx.engine, "pool"):
+        ctx.engine.pool.check_no_leaks()
+    return ctx, report
 
 
-def run_continuous(cfg, params, trace, budget: int, slot_len: int,
-                   seed: int, policy: str = "ljf"):
-    engine = ContinuousEngine(cfg, params=params, num_slots=budget,
-                              slot_len=slot_len, seed=seed)
-    engine.warm(set(len(p) for p, _ in trace))
+def static_json(report) -> dict:
+    """The static scenario entry (same fields as the pre-spec benchmark:
+    decode_tokens counts ride-along steps, decode_tok_per_s uses the
+    actually-emitted tokens)."""
+    emitted = sum(r["new_tokens"] for r in report.per_request)
+    return {"engine": "static", "arch": report.arch,
+            "wall_s": round(report.wall_s, 4),
+            "num_requests": report.num_requests,
+            "prefill_tokens": report.prefill_tokens,
+            "decode_tokens": report.decode_tokens,
+            "emitted_tokens": emitted,
+            "steps": report.steps,
+            "requests_per_s": round(report.requests_per_s, 2),
+            "decode_tok_per_s": round(emitted / report.wall_s, 2)
+            if report.wall_s > 0 else 0.0}
 
-    def once():
-        engine.reset()
-        sched = Scheduler(engine, token_budget=budget, policy=policy)
-        reqs = [ServeRequest(rid=i, prompt=p, max_new_tokens=m)
-                for i, (p, m) in enumerate(trace)]
-        return sched.run(reqs)
 
-    once()                                   # warmup (compile cache)
-    report = min((once() for _ in range(2)), key=lambda r: r.wall_s)
-    engine.pool.check_no_leaks()
-    return report
+def continuous_json(report) -> dict:
+    cj = report.to_json()
+    cj.pop("per_request")
+    cj.pop("step_active", None)
+    return cj
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--config", default=None, metavar="SERVE_JSON",
+                    help="base ServeSpec (default: the built-in spec); "
+                         "the sweep overrides engine/workload/budget per "
+                         "scenario")
+    ap.add_argument("--arch", default=None,
+                    help="override the base spec's model.arch")
     ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
-                    default=True)
+                    default=None)
     ap.add_argument("--queued", type=int, nargs="+", default=[8, 64, 256])
     ap.add_argument("--budget", type=int, default=96,
                     help="continuous decode token budget (pool slots)")
@@ -131,58 +133,52 @@ def main():
     else:
         prompt_lens, max_news = PROMPT_LENS, MAX_NEWS
 
-    cfg = get_config(args.arch, reduced=args.reduced)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    slot_len = max(prompt_lens) + max(max_news)
+    if args.config:
+        base = api.load_any_spec(args.config)
+        if not isinstance(base, api.ServeSpec):
+            raise SystemExit(f"{args.config} is not a serve spec")
+    else:
+        base = api.ServeSpec()
+    over = [f"workload.prompt_lens={json.dumps(prompt_lens)}",
+            f"workload.max_new_tokens={json.dumps(max_news)}",
+            f"engine.slot_len={max(prompt_lens) + max(max_news)}",
+            f"engine.seed={args.seed}",
+            f"scheduler.policy={args.policy}"]
+    if args.arch:
+        over.append(f"model.arch={args.arch}")
+    if args.reduced is not None:
+        over.append(f"model.reduced={'true' if args.reduced else 'false'}")
+    base = api.apply_overrides(base, over)
+    slot_len = base.resolved_slot_len()
 
     scenarios = []
     for n in args.queued:
-        trace = make_trace(n, prompt_lens, max_news, cfg.vocab_size,
-                           args.seed + n)
         budget = min(args.budget, n)
-        static = run_static(cfg, params, trace, args.seed)
-        cont = run_continuous(cfg, params, trace, budget, slot_len,
-                              args.seed, policy=args.policy)
+        _, st_report = best_of_2(
+            scenario_spec(base, "static", n, budget, args.seed))
+        ctx, cont = best_of_2(
+            scenario_spec(base, "continuous", n, budget, args.seed))
+        static = static_json(st_report)
         speedup = (cont.requests_per_s / static["requests_per_s"]
                    if static["requests_per_s"] else float("inf"))
-        cj = cont.to_json()
-        cj.pop("per_request")
-        cj.pop("step_active", None)
         scenario = {"queued": n, "budget": budget,
-                    "static": static, "continuous": cj,
+                    "static": static, "continuous": continuous_json(cont),
                     "speedup_requests_per_s": round(speedup, 2)}
 
         if n == max(args.queued) and args.verify:
-            k = len(trace) if args.verify < 0 else min(args.verify,
-                                                       len(trace))
-            mismatches = []
-            by_rid = {r["rid"]: r["tokens"] for r in
-                      cont.per_request}
-            for i in range(k):
-                prompt, max_new = trace[i]
-                want = reference_generate(model, params, prompt, max_new,
-                                          slot_len)
-                if by_rid[i] != want:
-                    mismatches.append(i)
-            scenario["verified_token_identical"] = {
-                "checked": k, "mismatches": mismatches}
-            status = "OK" if not mismatches else f"FAIL {mismatches}"
-            print(f"verify[{n} queued]: {k} requests vs single-request "
-                  f"decode — {status}")
-            if mismatches:
-                raise SystemExit(
-                    f"continuous outputs diverge from single-request "
-                    f"decoding: rids {mismatches}")
+            audit = api.verify_report(cont, ctx, n=args.verify)
+            scenario["verified_token_identical"] = audit
+            print(f"verify[{n} queued]: {audit['checked']} requests vs "
+                  f"single-request decode — OK")
 
         scenarios.append(scenario)
         print(f"queued={n:4d}  static {static['requests_per_s']:8.2f} req/s"
               f"  continuous {cont.requests_per_s:8.2f} req/s"
               f"  speedup {speedup:5.2f}x")
 
-    result = {"bench": "serve_throughput", "arch": cfg.name,
-              "reduced": args.reduced, "seed": args.seed,
-              "policy": args.policy,
+    result = {"bench": "serve_throughput", "arch": ctx.engine.cfg.name,
+              "reduced": base.model.reduced, "seed": args.seed,
+              "policy": base.scheduler.policy,
               "workload": {"prompt_lens": prompt_lens,
                            "max_new_tokens": max_news,
                            "slot_len": slot_len},

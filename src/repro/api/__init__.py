@@ -1,11 +1,15 @@
-"""`repro.api` — the declarative experiment API.
+"""`repro.api` — the declarative experiment + serving API.
 
-One serializable :class:`ExperimentSpec` pins an experiment; one protocol
-registry maps ``protocol.name`` to a strategy object; one training loop
-(:func:`repro.api.loop.fit`) drives every strategy; :func:`run` ties them
-together. See docs/api.md.
+One serializable spec pins a run (:class:`ExperimentSpec` for training,
+:class:`ServeSpec` for serving); registries map names to implementations
+(protocol strategies, scheduler/admission policies, serve engines); one
+training loop (:func:`repro.api.loop.fit`) drives every strategy and one
+serving runner (:func:`repro.api.serving.run_serve`) drives every engine;
+:func:`run` dispatches on the spec kind and ties them together. See
+docs/api.md.
 """
-from repro.api.cli import apply_overrides, load_spec, parse_set
+from repro.api.cli import (apply_overrides, load_any_spec, load_spec,
+                           parse_set)
 from repro.api.evaluation import batch_from, evaluate, jitted_predict
 from repro.api.events import (Callback, CheckpointCallback, ConsoleLogger,
                               EvalCallback, Event, PlanStatsCallback,
@@ -13,27 +17,49 @@ from repro.api.events import (Callback, CheckpointCallback, ConsoleLogger,
 from repro.api.loop import (DataBundle, History, RunContext, RunResult,
                             fit)
 from repro.api.registry import (ProtocolStrategy, StepItem,
-                                UnknownProtocolError, available_protocols,
-                                get_protocol, register_protocol)
+                                UnknownPolicyError, UnknownProtocolError,
+                                available_admission_policies,
+                                available_engines, available_protocols,
+                                available_scheduler_policies,
+                                get_admission_policy, get_engine,
+                                get_protocol, get_scheduler_policy,
+                                register_admission_policy, register_engine,
+                                register_protocol,
+                                register_scheduler_policy)
 from repro.api.runner import (build_context, build_data, build_model,
                               build_optimizer, default_callbacks, run)
-from repro.api.specs import (DataSpec, EvalSpec, ExecutionSpec,
+from repro.api.serving import (ServeContext, build_serve_context,
+                               build_workload, restore_params, run_serve,
+                               verify_report)
+from repro.api.specs import (AdmissionSpec, ClockSpec, DataSpec,
+                             EngineSpec, EvalSpec, ExecutionSpec,
                              ExperimentSpec, ModelSpec, OptimizerSpec,
-                             ProtocolSpec, SamplerSpec, SpecError,
-                             StragglerSpec)
+                             ProtocolSpec, ReportSpec, SamplerSpec,
+                             SchedulerSpec, ServeSpec, SpecError,
+                             StragglerSpec, WorkloadSpec)
 
 __all__ = [
     "ExperimentSpec", "ModelSpec", "OptimizerSpec", "DataSpec",
     "SamplerSpec", "ProtocolSpec", "ExecutionSpec", "EvalSpec",
     "StragglerSpec", "SpecError",
+    "ServeSpec", "EngineSpec", "AdmissionSpec", "SchedulerSpec",
+    "WorkloadSpec", "ClockSpec", "ReportSpec",
     "run", "fit", "build_context", "build_data", "build_model",
     "build_optimizer", "default_callbacks",
+    "run_serve", "build_serve_context", "build_workload", "ServeContext",
+    "restore_params", "verify_report",
     "register_protocol", "get_protocol", "available_protocols",
+    "register_scheduler_policy", "get_scheduler_policy",
+    "available_scheduler_policies",
+    "register_admission_policy", "get_admission_policy",
+    "available_admission_policies",
+    "register_engine", "get_engine", "available_engines",
     "ProtocolStrategy", "StepItem", "UnknownProtocolError",
+    "UnknownPolicyError",
     "RunContext", "RunResult", "DataBundle", "History",
     "Event", "Callback", "EvalCallback", "PlanStatsCallback",
     "StragglerTPECallback", "ShardArrivalCallback", "CheckpointCallback",
     "ConsoleLogger",
     "batch_from", "evaluate", "jitted_predict",
-    "apply_overrides", "parse_set", "load_spec",
+    "apply_overrides", "parse_set", "load_spec", "load_any_spec",
 ]

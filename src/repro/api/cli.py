@@ -1,22 +1,26 @@
 """Config-file + dotted-override plumbing for spec-driven CLIs.
 
-One experiment is one JSON document; the CLI surface is::
+One run is one JSON document — a training ExperimentSpec or a serving
+ServeSpec (distinguished by the top-level ``kind`` field); the CLI surface
+is the same for both::
 
     --config spec.json --set protocol.epochs=10 --set sampler.method=lds \
         --set sampler.kwargs.delta=1.5
+    --config serve.json --set scheduler.policy=ljf \
+        --set workload.num_requests=64
 
 ``parse_set`` parses one ``key=value`` item (value via JSON, falling back
 to a bare string); ``apply_overrides`` walks the dotted path through the
 spec tree (validating every segment against the dataclass schema — except
 inside free-form dict leaves like ``sampler.kwargs``) and returns a new
-spec.
+spec. ``load_any_spec`` dispatches a JSON file to the right spec class.
 """
 from __future__ import annotations
 
 import json
 from typing import Any, Dict, Iterable, Tuple
 
-from repro.api.specs import ExperimentSpec, SpecError
+from repro.api.specs import ExperimentSpec, ServeSpec, SpecError
 
 
 def parse_set(item: str) -> Tuple[str, Any]:
@@ -86,3 +90,20 @@ def apply_overrides(spec: ExperimentSpec,
 def load_spec(path: str) -> ExperimentSpec:
     with open(path) as f:
         return ExperimentSpec.from_json(f.read())
+
+
+_SPEC_KINDS = {"experiment": ExperimentSpec, "serve": ServeSpec}
+
+
+def load_any_spec(path: str):
+    """Load a spec JSON of either kind (``kind`` field; default
+    "experiment" so pre-serving config files keep loading)."""
+    with open(path) as f:
+        d = json.load(f)
+    if not isinstance(d, dict):
+        raise SpecError(f"{path}: expected a JSON object")
+    kind = d.get("kind", "experiment")
+    if kind not in _SPEC_KINDS:
+        raise SpecError(f"{path}: unknown spec kind {kind!r}; known: "
+                        f"{sorted(_SPEC_KINDS)}")
+    return _SPEC_KINDS[kind].from_dict(d)

@@ -1,21 +1,38 @@
-"""Protocol strategy registry.
+"""Name → implementation registries for protocols and serving policies.
 
-A *protocol strategy* packages the four protocol-specific ingredients —
-epoch planning, batch assembly, the step function, and the end-of-round
-aggregation hook — behind one interface, so every protocol (CL / SL / FL /
-SFL / PSL, and future variants like CycleSL or GAPSL) is driven by the same
-training loop in :mod:`repro.api.loop`. Adding a scenario costs one
-registry entry::
+Two pluggable surfaces share one mechanism:
+
+* **Protocol strategies** package the four protocol-specific training
+  ingredients — epoch planning, batch assembly, the step function, and the
+  end-of-round aggregation hook — behind one interface, so every protocol
+  (CL / SL / FL / SFL / PSL, and future variants like CycleSL or GAPSL) is
+  driven by the same training loop in :mod:`repro.api.loop`.
+* **Serving policies** are the server-side axes of the continuous-batching
+  runtime (the CycleSL lesson: the server-side policy is the pluggable
+  part): admission order (``@register_scheduler_policy``), the budget
+  controller (``@register_admission_policy``), and the engine itself
+  (``@register_engine`` — continuous slot-pool vs the static A/B baseline).
+
+Adding a scenario costs one registry entry::
 
     @register_protocol("cyclesl")
     class CycleSLStrategy(ProtocolStrategy):
         ...
 
-and is immediately reachable from JSON specs (``protocol.name``), the CLI,
-and the benchmarks.
+    @register_scheduler_policy("sjf")
+    class ShortestJobFirst:
+        def order(self, ready):
+            ready.sort(key=lambda r: r.max_new_tokens)
+
+and is immediately reachable from JSON specs (``protocol.name``,
+``scheduler.policy``, ``engine.name``, …), the CLIs, and the benchmarks.
+Built-ins register as an import side effect of their home module
+(:mod:`repro.api.protocols`, :mod:`repro.runtime`), imported lazily on
+first lookup to avoid registry ↔ implementation import cycles.
 """
 from __future__ import annotations
 
+import importlib
 from typing import Any, Dict, Iterator, List, Optional, Tuple, Type
 
 
@@ -23,44 +40,122 @@ class UnknownProtocolError(KeyError):
     """Lookup of a protocol name that was never registered."""
 
 
-_PROTOCOLS: Dict[str, Type["ProtocolStrategy"]] = {}
+class UnknownPolicyError(KeyError):
+    """Lookup of a serving policy/engine name that was never registered."""
+
+
+class _Registry:
+    """One name → implementation table with lazy built-in loading."""
+
+    def __init__(self, kind: str, builtins_module: str, error_cls):
+        self.kind = kind
+        self._builtins_module = builtins_module
+        self._error_cls = error_cls
+        self._loaded = False
+        self._entries: Dict[str, Any] = {}
+
+    def register(self, name: str, *, replace: bool = False):
+        """Decorator: make a class reachable by ``name`` (sets ``cls.name``)."""
+        def deco(obj):
+            if name in self._entries and not replace:
+                raise ValueError(
+                    f"{self.kind} {name!r} already registered "
+                    f"({self._entries[name].__name__}); pass replace=True "
+                    f"to override")
+            obj.name = name
+            self._entries[name] = obj
+            return obj
+        return deco
+
+    def get(self, name: str):
+        self._ensure_builtins()
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise self._error_cls(
+                f"unknown {self.kind} {name!r}; registered: "
+                f"{self.available()}") from None
+
+    def available(self) -> List[str]:
+        self._ensure_builtins()
+        return sorted(self._entries)
+
+    def pop(self, name: str, default=None):
+        """Remove an entry (test cleanup for throwaway registrations)."""
+        return self._entries.pop(name, default)
+
+    def _ensure_builtins(self) -> None:
+        # registering the built-ins is an import side effect of the home
+        # module; import lazily so registry<->implementation cycles never
+        # form at module load. A flag, not an emptiness check: a custom
+        # entry registered before the first lookup must not shadow the
+        # built-ins.
+        if not self._loaded:
+            self._loaded = True
+            importlib.import_module(self._builtins_module)
+
+
+_PROTOCOLS = _Registry("protocol", "repro.api.protocols",
+                       UnknownProtocolError)
+# importing the repro.runtime package pulls in queue/scheduler/engine/static,
+# which registers every built-in serving policy and engine
+_SCHEDULER_POLICIES = _Registry("scheduler policy", "repro.runtime",
+                                UnknownPolicyError)
+_ADMISSION_POLICIES = _Registry("admission policy", "repro.runtime",
+                                UnknownPolicyError)
+_ENGINES = _Registry("serve engine", "repro.runtime", UnknownPolicyError)
 
 
 def register_protocol(name: str, *, replace: bool = False):
     """Class decorator: make a :class:`ProtocolStrategy` reachable by name."""
-    def deco(cls: Type["ProtocolStrategy"]) -> Type["ProtocolStrategy"]:
-        if name in _PROTOCOLS and not replace:
-            raise ValueError(
-                f"protocol {name!r} already registered "
-                f"({_PROTOCOLS[name].__name__}); pass replace=True to "
-                f"override")
-        cls.name = name
-        _PROTOCOLS[name] = cls
-        return cls
-    return deco
+    return _PROTOCOLS.register(name, replace=replace)
 
 
 def get_protocol(name: str) -> Type["ProtocolStrategy"]:
-    _ensure_builtins()
-    try:
-        return _PROTOCOLS[name]
-    except KeyError:
-        raise UnknownProtocolError(
-            f"unknown protocol {name!r}; registered: "
-            f"{available_protocols()}") from None
+    return _PROTOCOLS.get(name)
 
 
 def available_protocols() -> List[str]:
-    _ensure_builtins()
-    return sorted(_PROTOCOLS)
+    return _PROTOCOLS.available()
 
 
-def _ensure_builtins() -> None:
-    # registering the built-in strategies is an import side effect of
-    # repro.api.protocols; import lazily to avoid a registry<->protocols
-    # cycle at module load
-    if not _PROTOCOLS:
-        import repro.api.protocols  # noqa: F401
+def register_scheduler_policy(name: str, *, replace: bool = False):
+    """Class decorator: an admission-order policy (``order(ready)``)."""
+    return _SCHEDULER_POLICIES.register(name, replace=replace)
+
+
+def get_scheduler_policy(name: str):
+    return _SCHEDULER_POLICIES.get(name)
+
+
+def available_scheduler_policies() -> List[str]:
+    return _SCHEDULER_POLICIES.available()
+
+
+def register_admission_policy(name: str, *, replace: bool = False):
+    """Class decorator: a budget controller (``grants``/``note_step``)."""
+    return _ADMISSION_POLICIES.register(name, replace=replace)
+
+
+def get_admission_policy(name: str):
+    return _ADMISSION_POLICIES.get(name)
+
+
+def available_admission_policies() -> List[str]:
+    return _ADMISSION_POLICIES.available()
+
+
+def register_engine(name: str, *, replace: bool = False):
+    """Class decorator: a serve engine (``from_spec``/``serve``)."""
+    return _ENGINES.register(name, replace=replace)
+
+
+def get_engine(name: str):
+    return _ENGINES.get(name)
+
+
+def available_engines() -> List[str]:
+    return _ENGINES.available()
 
 
 class StepItem:

@@ -1,10 +1,13 @@
-"""Materialize an ExperimentSpec and run it: ``repro.api.run(spec)``.
+"""Materialize a spec and run it: ``repro.api.run(spec)``.
 
-``run`` is the single entry point behind the launch CLI, the accuracy
-benchmarks, and the examples: it builds the model, optimizer, and data
-bundle the spec describes, picks the registered protocol strategy, wires
-the default callbacks (eval / plan stats / straggler timing / checkpoint),
-and drives the shared loop. Everything is pinned by the spec, so::
+``run`` is the single entry point behind the launch CLIs, the benchmarks,
+and the examples, dispatching on the spec kind: an :class:`ExperimentSpec`
+builds the model, optimizer, and data bundle it describes, picks the
+registered protocol strategy, wires the default callbacks (eval / plan
+stats / straggler timing / checkpoint), and drives the shared training
+loop; a :class:`ServeSpec` routes to :func:`repro.api.serving.run_serve`
+(registered engine + scheduling stack) and returns a ServeReport.
+Everything is pinned by the spec, so::
 
     run(ExperimentSpec.from_json(text))
 
@@ -16,10 +19,10 @@ import dataclasses
 from typing import List, Optional
 
 from repro.api import events as events_lib
-from repro.api.loop import DataBundle, RunContext, RunResult, fit
+from repro.api.loop import DataBundle, RunContext, fit
 from repro.api.registry import get_protocol
 from repro.api.specs import DataSpec, ExperimentSpec, ModelSpec, \
-    OptimizerSpec
+    OptimizerSpec, ServeSpec
 
 
 def build_model(spec: ModelSpec, *, seq_len: Optional[int] = None):
@@ -122,14 +125,23 @@ def build_context(spec: ExperimentSpec) -> RunContext:
                       spec=spec, seed=spec.seed)
 
 
-def run(spec: ExperimentSpec, callbacks=(), ctx: Optional[RunContext] = None
-        ) -> RunResult:
-    """Run one experiment: build from the spec, fit, return the result.
+def run(spec, callbacks=(), ctx=None):
+    """Run one spec: a training RunResult or a serving ServeReport.
 
-    ``callbacks`` extend (never replace) the defaults derived from the
-    spec; pass a prebuilt ``ctx`` to reuse already-materialized data or
-    models across runs.
+    Dispatches on the spec kind — an ExperimentSpec fits the registered
+    protocol strategy through the shared loop; a ServeSpec drives the
+    registered serve engine (``repro.api.serving``). ``callbacks`` extend
+    (never replace) the training defaults derived from the spec; pass a
+    prebuilt ``ctx`` (RunContext / ServeContext) to reuse
+    already-materialized data, models, or engines across runs.
     """
+    if isinstance(spec, ServeSpec):
+        if callbacks:
+            raise ValueError(
+                "callbacks are a training-loop feature; a ServeSpec run "
+                "takes none (use report.out / ServeReport instead)")
+        from repro.api.serving import run_serve
+        return run_serve(spec, ctx=ctx)
     if ctx is None:
         ctx = build_context(spec)
     else:

@@ -1,0 +1,162 @@
+"""Materialize a ServeSpec and run it: the serving side of ``api.run``.
+
+Mirrors :mod:`repro.api.runner` for inference: build the model the spec
+describes (optionally restoring a trained params artifact from
+``spec.checkpoint``), construct the registered engine sized by the spec,
+synthesize the seeded request workload, and serve it — returning the
+engine's :class:`repro.runtime.ServeReport`. Everything is pinned by the
+spec, so::
+
+    run_serve(ServeSpec.from_json(text))
+
+replays a serving workload from one JSON document, and an
+ExperimentSpec+ServeSpec JSON pair reproduces train-then-serve end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Any, List, Optional
+
+import numpy as np
+
+from repro.api.registry import get_engine
+from repro.api.runner import build_model
+from repro.api.specs import ServeSpec, SpecError
+
+
+@dataclasses.dataclass
+class ServeContext:
+    """Built serving objects; pass back to ``run_serve`` to reuse the
+    engine (and its compiled functions) across runs of related specs.
+    The engine geometry is fixed at build time — a rebound spec may vary
+    the workload and scheduling axes, not the pool size."""
+    model: Any
+    params: Any
+    engine: Any
+    spec: ServeSpec
+
+
+def build_workload(spec: ServeSpec, vocab_size: int):
+    """The seeded request trace a WorkloadSpec describes.
+
+    Per request: a prompt length and output length drawn from the spec's
+    menus, then uniform random token ids — one rng stream, so the trace is
+    a pure function of the spec. Straggler arrivals (when configured) reuse
+    the training-side delay model.
+    """
+    from repro.runtime.queue import ServeRequest
+    w = spec.workload
+    rng = np.random.default_rng(w.seed)
+    reqs: List = []
+    for i in range(w.num_requests):
+        plen = int(rng.choice(w.prompt_lens))
+        reqs.append(ServeRequest(
+            rid=i, prompt=rng.integers(0, vocab_size, plen).astype(np.int32),
+            max_new_tokens=int(rng.choice(w.max_new_tokens))))
+    if w.arrivals is not None:
+        from repro.core.straggler import straggler_arrivals
+        a = w.arrivals
+        delays = straggler_arrivals(w.num_requests, a.p_straggler, a.w_min,
+                                    a.w_max, seed=a.seed,
+                                    time_scale=w.time_scale)
+        for r, t in zip(reqs, delays):
+            r.arrival_s = float(t)
+    return reqs
+
+
+def restore_params(model, path: str):
+    """Load a checkpoint artifact and check it fits ``model``.
+
+    The artifact comes from ``repro.checkpoint.save`` (a training run with
+    ``execution.checkpoint`` set). Structure and leaf shapes are checked
+    against the model's init — a mismatched arch fails here with the spec
+    fields to fix, not deep inside a jit trace.
+    """
+    import jax
+    from repro.checkpoint import restore
+    params = restore(path)
+    want = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    got_leaves, got_tree = jax.tree_util.tree_flatten(params)
+    want_leaves, want_tree = jax.tree_util.tree_flatten(want)
+    if got_tree != want_tree:
+        raise SpecError(
+            f"checkpoint {path!r} does not match the spec's model tree "
+            f"(arch/reduced/overrides must equal the training spec's)")
+    for g, w in zip(got_leaves, want_leaves):
+        if tuple(np.shape(g)) != tuple(w.shape):
+            raise SpecError(
+                f"checkpoint {path!r} leaf shape {tuple(np.shape(g))} != "
+                f"model shape {tuple(w.shape)}; arch/reduced/overrides "
+                f"must equal the training spec's")
+    return params
+
+
+def build_serve_context(spec: ServeSpec, params=None) -> ServeContext:
+    """Spec → built engine, without serving anything."""
+    spec.validate()
+    # the slot length doubles as the model's working sequence length, the
+    # same max_seq_len floor the training-side builder applies — so a
+    # checkpointed LM trained at seq_len <= 256 restores shape-exact
+    model = build_model(spec.model, seq_len=spec.resolved_slot_len())
+    if params is None and spec.checkpoint:
+        params = restore_params(model, spec.checkpoint)
+    engine = get_engine(spec.engine.name).from_spec(model.cfg, spec,
+                                                    params=params,
+                                                    model=model)
+    return ServeContext(model=engine.model, params=engine.params,
+                        engine=engine, spec=spec)
+
+
+def verify_report(report, ctx: ServeContext, requests=None,
+                  n: int = -1) -> dict:
+    """Check served outputs token-identical to single-request decoding.
+
+    ``n`` limits how many requests are replayed through
+    ``reference_generate`` (-1 = all). Raises RuntimeError listing the
+    diverging rids; returns the audit dict recorded on the report.
+    """
+    from repro.runtime.engine import reference_generate
+    if requests is None:
+        requests = build_workload(ctx.spec, ctx.engine.cfg.vocab_size)
+    k = len(requests) if n < 0 else min(n, len(requests))
+    slot_len = ctx.engine.pool.slot_len
+    by_rid = {r["rid"]: r["tokens"] for r in report.per_request}
+    mismatches = []
+    for req in requests[:k]:
+        want = reference_generate(ctx.model, ctx.params, req.prompt,
+                                  req.max_new_tokens, slot_len)
+        if by_rid[req.rid] != want:
+            mismatches.append(req.rid)
+    if mismatches:
+        raise RuntimeError(
+            f"continuous outputs diverge from single-request decoding: "
+            f"rids {mismatches}")
+    return {"checked": k, "mismatches": []}
+
+
+def run_serve(spec: ServeSpec, ctx: Optional[ServeContext] = None):
+    """Run one serving workload: build from the spec, serve, report.
+
+    Pass a prebuilt ``ctx`` to reuse an engine across runs (warmup + timed
+    benchmark passes); the spec argument then rebinds the workload and
+    scheduling axes while the engine keeps its compiled functions.
+    """
+    if ctx is None:
+        ctx = build_serve_context(spec)
+    else:
+        spec.validate()
+        ctx = dataclasses.replace(ctx, spec=spec)
+    requests = build_workload(spec, ctx.engine.cfg.vocab_size)
+    report = ctx.engine.serve(requests, spec)
+    if spec.report.verify:
+        report.verified = verify_report(report, ctx, requests=requests,
+                                        n=spec.report.verify)
+    if spec.report.out:
+        j = report.to_json()
+        if not spec.report.per_request:
+            j.pop("per_request", None)
+        pathlib.Path(spec.report.out).write_text(
+            json.dumps(j, indent=2) + "\n")
+    return report

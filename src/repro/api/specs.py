@@ -1,26 +1,37 @@
-"""Declarative experiment specifications (the `repro.api` surface).
+"""Declarative run specifications (the `repro.api` surface).
 
 An :class:`ExperimentSpec` is a serializable dataclass tree that pins every
-axis of a run — model, optimizer, data, sampling policy, training protocol,
-execution backend, evaluation — so one JSON document reproduces one
-experiment end to end::
+axis of a training run — model, optimizer, data, sampling policy, training
+protocol, execution backend, evaluation; a :class:`ServeSpec` pins a
+serving workload the same way — model, engine, admission, scheduling,
+workload, clock, reporting. One JSON document reproduces one run end to
+end, and ``repro.api.run`` dispatches on the spec kind::
 
     spec = ExperimentSpec.from_json(pathlib.Path("spec.json").read_text())
-    result = repro.api.run(spec)
+    result = repro.api.run(spec)                  # RunResult
+
+    spec = ServeSpec.from_json(pathlib.Path("serve.json").read_text())
+    report = repro.api.run(spec)                  # ServeReport
 
 The axes are deliberately orthogonal (the paper's drop-in claim): swapping
 ``sampler.method`` from "fpls" to "ugs", ``protocol.name`` from "psl" to
-"sfl", or ``execution.engine`` from "fused" to "sharded" never touches the
-other fields. ``to_dict``/``from_dict``/``to_json``/``from_json`` round-trip
-exactly; ``from_dict`` rejects unknown keys so stale configs fail loudly.
+"sfl", ``execution.engine`` from "fused" to "sharded", or a ServeSpec's
+``scheduler.policy`` from "fifo" to "ljf" never touches the other fields.
+``to_dict``/``from_dict``/``to_json``/``from_json`` round-trip exactly;
+``from_dict`` rejects unknown keys so stale configs fail loudly.
 Dotted-path overrides (``repro.api.cli.apply_overrides``) edit any leaf.
+
+The two spec kinds close a loop through ``repro.checkpoint``: a training
+spec with ``execution.checkpoint`` emits a params artifact that a serve
+spec references via its ``checkpoint`` field, so one pair of JSON files
+reproduces train-then-serve.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import typing
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 
 class SpecError(ValueError):
@@ -53,6 +64,8 @@ class SpecBase:
                 v = v.to_dict()
             elif isinstance(v, dict):
                 v = dict(v)
+            elif isinstance(v, list):
+                v = list(v)
             out[f.name] = v
         return out
 
@@ -282,8 +295,11 @@ class ExperimentSpec(SpecBase):
     execution: ExecutionSpec = dataclasses.field(
         default_factory=ExecutionSpec)
     eval: EvalSpec = dataclasses.field(default_factory=EvalSpec)
+    kind: str = "experiment"        # run(spec) / load_any_spec dispatch tag
 
     def validate(self) -> "ExperimentSpec":
+        self._require(self.kind == "experiment",
+                      f"kind must be 'experiment', got {self.kind!r}")
         for sub in (self.model, self.optimizer, self.data, self.sampler,
                     self.protocol, self.execution, self.eval):
             sub.validate()
@@ -293,4 +309,205 @@ class ExperimentSpec(SpecBase):
         if self.execution.engine == "sharded":
             self._require(self.protocol.name == "psl",
                           "the sharded engine only lowers the psl protocol")
+        return self
+
+
+# ---------------------------------------------------------------------------
+# Serving specs: one ServeSpec pins one serving workload end to end
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec(SpecBase):
+    """Which serve engine runs the workload, and its pool geometry.
+
+    ``name`` selects a registered engine ("continuous" slot-pool runtime or
+    the "static" A/B baseline). ``num_slots`` defaults to the admission
+    token budget (falling back to the workload size) and ``slot_len`` to
+    the workload's max prompt + max output length; ``seed`` initializes
+    params when the spec carries no checkpoint.
+    """
+    name: str = "continuous"
+    num_slots: Optional[int] = None
+    slot_len: Optional[int] = None
+    seed: int = 0
+
+    def validate(self) -> "EngineSpec":
+        from repro.api.registry import available_engines
+        self._require(self.name in available_engines(),
+                      f"unknown engine {self.name!r}; registered: "
+                      f"{available_engines()}")
+        self._require(self.num_slots is None or self.num_slots >= 1,
+                      "num_slots must be >= 1 (or null)")
+        self._require(self.slot_len is None or self.slot_len >= 2,
+                      "slot_len must be >= 2 (or null)")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionSpec(SpecBase):
+    """Admission control: the GPSL invariant, served.
+
+    ``policy`` selects a registered controller ("budget" holds the per-step
+    decode token budget fixed); ``token_budget`` defaults to the engine's
+    slot count. ``max_admits_per_step`` optionally throttles how many
+    freed-budget grants one scheduler iteration may prefill.
+    """
+    policy: str = "budget"
+    token_budget: Optional[int] = None
+    max_admits_per_step: Optional[int] = None
+
+    def validate(self) -> "AdmissionSpec":
+        from repro.api.registry import available_admission_policies
+        self._require(self.policy in available_admission_policies(),
+                      f"unknown admission policy {self.policy!r}; "
+                      f"registered: {available_admission_policies()}")
+        self._require(self.token_budget is None or self.token_budget >= 1,
+                      "token_budget must be >= 1 (or null)")
+        self._require(self.max_admits_per_step is None
+                      or self.max_admits_per_step >= 1,
+                      "max_admits_per_step must be >= 1 (or null)")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerSpec(SpecBase):
+    """Admission-order policy ("fifo" arrival-fair, "ljf" longest-job-first;
+    extend via repro.api.register_scheduler_policy)."""
+    policy: str = "fifo"
+
+    def validate(self) -> "SchedulerSpec":
+        from repro.api.registry import available_scheduler_policies
+        self._require(self.policy in available_scheduler_policies(),
+                      f"unknown scheduler policy {self.policy!r}; "
+                      f"registered: {available_scheduler_policies()}")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec(SpecBase):
+    """The synthetic request trace: sizes drawn per request from the
+    ``prompt_lens`` × ``max_new_tokens`` menus (seeded), with optional
+    straggler arrival delays (``arrivals`` reuses the training-side
+    StragglerSpec; ``time_scale`` converts its ms into scheduler seconds).
+    """
+    num_requests: int = 8
+    prompt_lens: List[int] = dataclasses.field(
+        default_factory=lambda: [32])
+    max_new_tokens: List[int] = dataclasses.field(
+        default_factory=lambda: [16])
+    seed: int = 0
+    arrivals: Optional[StragglerSpec] = None
+    time_scale: float = 1e-3
+
+    def validate(self) -> "WorkloadSpec":
+        self._require(self.num_requests > 0, "num_requests must be positive")
+        self._require(bool(self.prompt_lens)
+                      and all(p >= 1 for p in self.prompt_lens),
+                      "prompt_lens must be a non-empty list of lengths >= 1")
+        self._require(bool(self.max_new_tokens)
+                      and all(m >= 1 for m in self.max_new_tokens),
+                      "max_new_tokens must be a non-empty list of "
+                      "lengths >= 1")
+        self._require(self.time_scale > 0, "time_scale must be positive")
+        if self.arrivals is not None:
+            self.arrivals.validate()
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class ClockSpec(SpecBase):
+    """Scheduler clock: "wall" (real time, idle waits sleep) or "virtual"
+    (deterministic tick per engine operation — replayable tests)."""
+    kind: str = "wall"
+    tick_s: float = 1e-3
+
+    def validate(self) -> "ClockSpec":
+        self._require(self.kind in ("wall", "virtual"),
+                      f"unknown clock kind {self.kind!r}")
+        self._require(self.tick_s > 0, "tick_s must be positive")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class ReportSpec(SpecBase):
+    """Report handling: ``verify`` checks N continuous outputs (-1 = all)
+    token-identical against single-request decoding; ``out`` writes the
+    report JSON (without per-request rows unless ``per_request``)."""
+    verify: int = 0
+    per_request: bool = True
+    out: Optional[str] = None
+
+    def validate(self) -> "ReportSpec":
+        self._require(self.verify >= -1,
+                      "verify must be -1 (all), 0 (off), or a count")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec(SpecBase):
+    """The root: one serving workload, fully pinned, JSON round-trippable.
+
+    ``checkpoint`` optionally references a params artifact emitted by a
+    training run (``ExperimentSpec.execution.checkpoint`` →
+    ``repro.checkpoint``), closing the train→serve loop: the served model
+    is the trained one, not a fresh init.
+    """
+    kind: str = "serve"             # run(spec) / load_any_spec dispatch tag
+    model: ModelSpec = dataclasses.field(
+        default_factory=lambda: ModelSpec(arch="granite-3-2b"))
+    engine: EngineSpec = dataclasses.field(default_factory=EngineSpec)
+    admission: AdmissionSpec = dataclasses.field(
+        default_factory=AdmissionSpec)
+    scheduler: SchedulerSpec = dataclasses.field(
+        default_factory=SchedulerSpec)
+    workload: WorkloadSpec = dataclasses.field(
+        default_factory=WorkloadSpec)
+    clock: ClockSpec = dataclasses.field(default_factory=ClockSpec)
+    report: ReportSpec = dataclasses.field(default_factory=ReportSpec)
+    checkpoint: Optional[str] = None
+
+    # -- derived geometry (the None-default resolution chain) ----------
+
+    def resolved_num_slots(self) -> int:
+        if self.engine.num_slots is not None:
+            return self.engine.num_slots
+        if self.admission.token_budget is not None:
+            return self.admission.token_budget
+        return self.workload.num_requests
+
+    def resolved_slot_len(self) -> int:
+        if self.engine.slot_len is not None:
+            return self.engine.slot_len
+        return (max(self.workload.prompt_lens)
+                + max(self.workload.max_new_tokens))
+
+    def validate(self) -> "ServeSpec":
+        self._require(self.kind == "serve",
+                      f"kind must be 'serve', got {self.kind!r}")
+        for sub in (self.model, self.engine, self.admission, self.scheduler,
+                    self.workload, self.clock, self.report):
+            sub.validate()
+        self._require(self.model.arch != "paper-cnn",
+                      "serving needs a decoder LM arch, not the "
+                      "classification CNN")
+        if (self.admission.token_budget is not None
+                and self.engine.num_slots is not None):
+            self._require(
+                self.admission.token_budget <= self.engine.num_slots,
+                "token_budget exceeds num_slots: budgeted slots must exist")
+        if self.engine.slot_len is not None:
+            self._require(
+                self.resolved_slot_len()
+                >= max(self.workload.prompt_lens)
+                + max(self.workload.max_new_tokens),
+                "slot_len too small for the workload's max prompt + max "
+                "new tokens")
+        if self.engine.name == "static":
+            self._require(self.report.verify == 0,
+                          "verify requires the continuous engine "
+                          "(left-padded static batches are not "
+                          "token-identical; docs/serving.md)")
+            self._require(self.workload.arrivals is None,
+                          "the static engine assembles its batch up front "
+                          "and cannot honor straggler arrivals")
         return self

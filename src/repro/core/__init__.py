@@ -15,7 +15,8 @@ from repro.core.deviation import (batch_deviation, lemma1_bound, lemma2_bound,
                                   lemma2_terms, simulate_plan_deviation)
 from repro.core.partition import partition_dirichlet, partition_iid
 from repro.core.straggler import (adjust_concentration, assign_delays,
-                                  delay_zscores, simulate_tpe)
+                                  delay_zscores, simulate_tpe,
+                                  straggler_arrivals)
 
 __all__ = [
     "ClientPopulation", "EpochPlan", "make_plan", "ugs_plan", "lds_plan",
@@ -24,5 +25,5 @@ __all__ = [
     "log_posterior", "batch_deviation", "lemma1_bound", "lemma2_bound",
     "lemma2_terms", "simulate_plan_deviation", "partition_dirichlet",
     "partition_iid", "adjust_concentration", "assign_delays",
-    "delay_zscores", "simulate_tpe",
+    "delay_zscores", "simulate_tpe", "straggler_arrivals",
 ]

@@ -26,6 +26,23 @@ def assign_delays(num_clients: int, p_straggler: float, w_min: float,
     return delays.astype(np.float64)
 
 
+def straggler_arrivals(num_requests: int, p_straggler: float = 0.2,
+                       w_min: float = 50.0, w_max: float = 500.0,
+                       seed: int = 0, time_scale: float = 1e-3) -> np.ndarray:
+    """Arrival times (s) for a serving request trace with straggling clients.
+
+    The one arrival model shared by training and serving: each client
+    straggles with probability ``p_straggler`` and its prompt arrives
+    ``U[w_min, w_max]`` ms late (the Sec. V-B delays from
+    :func:`assign_delays`); ``time_scale`` converts ms of model time into
+    scheduler seconds. Used by ``repro.runtime.scheduler`` and by
+    spec-driven workloads (``repro.api.serving``).
+    """
+    delays_ms = assign_delays(num_requests, p_straggler, w_min, w_max,
+                              seed=seed)
+    return delays_ms * time_scale
+
+
 def delay_zscores(delays: np.ndarray) -> np.ndarray:
     """Standardized delays; zero vector when all delays are equal."""
     delays = np.asarray(delays, dtype=np.float64)

@@ -5,6 +5,8 @@
     experiment API: each one assembles a :class:`repro.api.RunContext`
     from its (model, optimizer, data) arguments and drives the registered
     protocol strategy through the shared loop (``repro.api.loop.fit``).
+    Each emits a :class:`DeprecationWarning` on call (trajectories stay
+    identical — tests/test_api.py pins every shim against ``api.run``).
     New code should build an :class:`repro.api.ExperimentSpec` and call
     ``repro.api.run(spec)`` instead — same trajectories, one JSON document
     per experiment. The protocols themselves live in
@@ -19,6 +21,8 @@
 """
 from __future__ import annotations
 
+import functools
+import warnings
 from typing import Optional
 
 from repro.api import events as events_lib
@@ -29,6 +33,19 @@ from repro.api.registry import get_protocol
 from repro.api.specs import (EvalSpec, ExecutionSpec, ExperimentSpec,
                              ProtocolSpec, SamplerSpec)
 from repro.data.federated import ClientStore
+
+
+def _deprecated_shim(fn):
+    """Stamp a trainer entry point as a shim over ``repro.api.run``."""
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        warnings.warn(
+            f"repro.frameworks.trainers.{fn.__name__} is deprecated; "
+            f"build a repro.api.ExperimentSpec and call repro.api.run(spec)"
+            f" (same trajectory, one JSON document per experiment)",
+            DeprecationWarning, stacklevel=2)
+        return fn(*args, **kwargs)
+    return wrapper
 
 
 def _shim_spec(protocol: str, *, epochs: int, batch_size: int = 64,
@@ -66,6 +83,7 @@ def _fit(model, optimizer, data: DataBundle, spec: ExperimentSpec,
     return fit(ctx, get_protocol(spec.protocol.name)(), callbacks).history
 
 
+@_deprecated_shim
 def train_cl(model, optimizer, features, labels, test, *, epochs: int,
              batch_size: int, seed: int = 0) -> History:
     spec = _shim_spec("cl", epochs=epochs, batch_size=batch_size)
@@ -73,6 +91,7 @@ def train_cl(model, optimizer, features, labels, test, *, epochs: int,
     return _fit(model, optimizer, data, spec, seed)
 
 
+@_deprecated_shim
 def train_psl(model, optimizer, store: ClientStore, test, *, epochs: int,
               global_batch_size: int, method: str = "ugs",
               aggregation: str = "global_mean", seed: int = 0,
@@ -97,6 +116,7 @@ def train_psl(model, optimizer, store: ClientStore, test, *, epochs: int,
     return _fit(model, optimizer, data, spec, seed, cbs)
 
 
+@_deprecated_shim
 def train_psl_sharded(model, optimizer, store: ClientStore, test, *,
                       epochs: int, global_batch_size: int,
                       method: str = "ugs",
@@ -128,6 +148,7 @@ def train_psl_sharded(model, optimizer, store: ClientStore, test, *,
     return _fit(model, optimizer, data, spec, seed, cbs, mesh=mesh)
 
 
+@_deprecated_shim
 def train_sl(model, optimizer, store: ClientStore, test, *, epochs: int,
              batch_size: int, seed: int = 0) -> History:
     spec = _shim_spec("sl", epochs=epochs, batch_size=batch_size)
@@ -135,6 +156,7 @@ def train_sl(model, optimizer, store: ClientStore, test, *, epochs: int,
     return _fit(model, optimizer, data, spec, seed)
 
 
+@_deprecated_shim
 def train_fl(model, optimizer, store: ClientStore, test, *, epochs: int,
              batch_size: int, local_epochs: Optional[int] = None,
              seed: int = 0) -> History:
@@ -144,6 +166,7 @@ def train_fl(model, optimizer, store: ClientStore, test, *, epochs: int,
     return _fit(model, optimizer, data, spec, seed)
 
 
+@_deprecated_shim
 def train_sfl(model, optimizer, store: ClientStore, test, *, epochs: int,
               batch_size: int, seed: int = 0) -> History:
     """SplitFed-V1 (shim): per round each client runs its local batches

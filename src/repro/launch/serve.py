@@ -1,145 +1,120 @@
-"""Split-inference serving driver (the PSL serving analogue).
+"""Split-inference serving CLI — a thin shell over ``repro.api.run``.
 
-Requests carry client-generated prompts; the server completes generation.
-The default engine is the continuous-batching runtime (repro.runtime): a
-global admission controller holds the per-step decode token budget fixed —
-the GPSL invariant applied to serving — while a slot-pooled KV cache recycles
-capacity the moment a request finishes. ``--static`` keeps the original
-static-batch engine for A/B comparison (see benchmarks/serve_throughput.py
-and docs/serving.md).
+The workload is one :class:`repro.api.ServeSpec`; the CLI loads it from
+``--config serve.json``, applies dotted ``--set key=value`` overrides, and
+hands it to the runner (spec → registered engine + scheduling stack →
+ServeReport). The default engine is the continuous-batching runtime
+(repro.runtime): a global admission controller holds the per-step decode
+token budget fixed — the GPSL invariant applied to serving. A few legacy
+convenience flags (``--requests``, ``--budget``, ``--static``, …) map onto
+spec overrides so existing invocations keep working.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
       --requests 8 --prompt-len 32 --max-new 16 --budget 8
-  ... --static            # original static-batch engine
+  PYTHONPATH=src python -m repro.launch.serve --config serve.json \
+      --set scheduler.policy=ljf --set workload.num_requests=64
+  ... --static            # static-batch A/B engine (engine.name=static)
   ... --no-reduced        # full-size architecture
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import functools
-import time
 from typing import List
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_config
-from repro.models import build_model
-from repro.runtime import ContinuousEngine, Scheduler, ServeRequest
+from repro import api
+# legacy re-exports: the static engine moved into the runtime package
+from repro.runtime.static import BatchedServer, Request  # noqa: F401
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray          # (S,) int32
-    max_new_tokens: int
-    generated: List[int] = dataclasses.field(default_factory=list)
+def default_serve_spec() -> api.ServeSpec:
+    """The CLI's baseline spec: reduced granite, 8 requests, budget 8."""
+    return api.ServeSpec(
+        model=api.ModelSpec(arch="granite-3-2b", reduced=True))
 
 
-class BatchedServer:
-    """Static-batch generation engine with greedy decoding.
+def _legacy_overrides(args) -> List[str]:
+    """Map the convenience flags onto dotted spec overrides."""
+    sets: List[str] = []
 
-    Kept as the A/B baseline for the continuous runtime. Note its batch
-    inflation: every request pays max prompt length and max output length,
-    and nothing is admitted mid-flight.
-    """
+    def add(key, value):
+        if value is not None:
+            sets.append(f"{key}={value}")
 
-    def __init__(self, cfg, params=None, seed: int = 0):
-        self.cfg = cfg
-        self.model = build_model(cfg)
-        self.params = params if params is not None else self.model.init(
-            jax.random.PRNGKey(seed))
-        self._decode = jax.jit(self.model.decode_step,
-                               donate_argnums=(1,))
-
-    def generate(self, requests: List[Request]) -> List[Request]:
-        cfg = self.cfg
-        b = len(requests)
-        plen = max(len(r.prompt) for r in requests)
-        max_new = max(r.max_new_tokens for r in requests)
-        cache_len = plen + max_new
-        prompts = np.zeros((b, plen), np.int32)
-        for i, r in enumerate(requests):
-            # Static batching LEFT-pads: prompts are right-aligned so every
-            # row decodes at one shared scalar position. Pad-token KV stays
-            # visible to real tokens, so mixed-length static batches are not
-            # token-identical to unpadded decoding; the continuous runtime
-            # avoids padding entirely. Canonical discussion: docs/serving.md.
-            prompts[i, plen - len(r.prompt):] = r.prompt
-        batch = {"tokens": jnp.asarray(prompts)}
-        if cfg.family == "vlm":
-            batch["patches"] = jnp.zeros((b, cfg.num_patches, cfg.d_model),
-                                         cfg.jnp_dtype)
-        if cfg.family == "audio":
-            batch["frames"] = jnp.zeros((b, cfg.encoder_seq, cfg.d_model),
-                                        cfg.jnp_dtype)
-        prefill = jax.jit(functools.partial(self.model.prefill,
-                                            cache_len=cache_len))
-        logits, cache, pos = prefill(self.params, batch)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        for i, r in enumerate(requests):
-            r.generated.append(int(tok[i, 0]))
-        for step in range(1, max_new):
-            logits, cache = self._decode(self.params, cache, tok, pos)
-            pos = pos + 1
-            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-            for i, r in enumerate(requests):
-                if step < r.max_new_tokens:
-                    r.generated.append(int(tok[i, 0]))
-        return requests
+    add("model.arch", args.arch)
+    if args.reduced is not None:        # tri-state: --reduced/--no-reduced
+        add("model.reduced", "true" if args.reduced else "false")
+    if args.static:
+        add("engine.name", "static")
+    add("workload.num_requests", args.requests)
+    if args.prompt_len is not None:
+        add("workload.prompt_lens", f"[{args.prompt_len}]")
+    if args.max_new is not None:
+        add("workload.max_new_tokens", f"[{args.max_new}]")
+    add("admission.token_budget", args.budget)
+    add("scheduler.policy", args.policy)
+    add("report.verify", args.verify)
+    add("checkpoint", args.checkpoint)
+    if args.seed is not None:
+        add("engine.seed", args.seed)
+        add("workload.seed", args.seed)
+    return sets
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="granite-3-2b")
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default=None, metavar="SERVE_JSON",
+                    help="ServeSpec JSON file (see docs/api.md)")
+    ap.add_argument("--set", action="append", default=[], metavar="K=V",
+                    dest="sets",
+                    help="dotted spec override, e.g. scheduler.policy=ljf "
+                         "or workload.prompt_lens=[8,64] (repeatable)")
+    ap.add_argument("--print-spec", action="store_true",
+                    help="print the resolved spec JSON and exit")
+    # legacy convenience flags (all map onto --set overrides)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
-                    default=True,
+                    default=None,
                     help="smoke-size architecture (--no-reduced for full)")
     ap.add_argument("--static", action="store_true",
                     help="use the static-batch engine instead of the "
                          "continuous runtime")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--budget", type=int, default=8,
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--prompt-len", type=int, default=None)
+    ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--budget", type=int, default=None,
                     help="continuous runtime: per-step decode token budget")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    ap.add_argument("--policy", default=None, choices=["fifo", "ljf"],
+                    help="admission order (registered scheduler policy)")
+    ap.add_argument("--verify", type=int, default=None,
+                    help="check N outputs against single-request decoding "
+                         "(-1 = all)")
+    ap.add_argument("--checkpoint", default=None, metavar="PARAMS_NPZ",
+                    help="serve params from a training-run artifact "
+                         "(ExperimentSpec execution.checkpoint)")
+    ap.add_argument("--seed", type=int, default=None)
+    args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, reduced=args.reduced)
-    rng = np.random.default_rng(args.seed)
-    prompts = [rng.integers(0, cfg.vocab_size,
-                            args.prompt_len).astype(np.int32)
-               for _ in range(args.requests)]
-
-    if args.static:
-        server = BatchedServer(cfg, seed=args.seed)
-        reqs = [Request(rid=i, prompt=p, max_new_tokens=args.max_new)
-                for i, p in enumerate(prompts)]
-        t0 = time.time()
-        out = server.generate(reqs)
-        dt = time.time() - t0
-        total_new = sum(len(r.generated) for r in out)
-        print(f"arch={cfg.name} engine=static batch={len(out)} "
-              f"new_tokens={total_new} wall={dt:.2f}s "
-              f"({total_new/dt:.1f} tok/s)")
-        for r in out[:3]:
-            print(f"  req {r.rid}: {r.generated[:12]}...")
+    if args.config:
+        spec = api.load_any_spec(args.config)
+        if not isinstance(spec, api.ServeSpec):
+            raise SystemExit(f"{args.config} is a {spec.kind!r} spec; "
+                             f"the serve CLI needs kind 'serve' "
+                             f"(use repro.launch.train for experiments)")
+    else:
+        spec = default_serve_spec()
+    spec = api.apply_overrides(spec, _legacy_overrides(args) + args.sets)
+    if args.print_spec:
+        print(spec.to_json())
         return
 
-    engine = ContinuousEngine(
-        cfg, num_slots=args.budget,
-        slot_len=args.prompt_len + args.max_new, seed=args.seed)
-    sched = Scheduler(engine, token_budget=args.budget)
-    reqs = [ServeRequest(rid=i, prompt=p, max_new_tokens=args.max_new)
-            for i, p in enumerate(prompts)]
-    report = sched.run(reqs)
-    print(f"arch={cfg.name} " + report.summary())
+    report = api.run(spec)
+    print(f"arch={report.arch} " + report.summary())
     for r in report.per_request[:3]:
         print(f"  req {r['rid']}: {r['tokens'][:12]}...")
+    if report.verified is not None:
+        print(f"verified token-identical: {report.verified['checked']} "
+              f"requests")
 
 
 if __name__ == "__main__":

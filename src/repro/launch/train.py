@@ -191,8 +191,14 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=None)
     args = ap.parse_args(argv)
 
-    spec = (api.load_spec(args.config) if args.config
-            else default_lm_spec())
+    if args.config:
+        spec = api.load_any_spec(args.config)
+        if not isinstance(spec, api.ExperimentSpec):
+            raise SystemExit(f"{args.config} is a {spec.kind!r} spec; "
+                             f"the train CLI needs kind 'experiment' "
+                             f"(use repro.launch.serve for serving)")
+    else:
+        spec = default_lm_spec()
     spec = api.apply_overrides(spec, _legacy_overrides(args) + args.sets)
     if args.print_spec:
         print(spec.to_json())

@@ -6,6 +6,13 @@ invariant applied to inference), a slot-pooled KV cache lets finished
 requests release capacity instead of padding every request to the global
 max, and a jit-compiled engine decodes all active slots — each at its own
 position — in one device call. See docs/serving.md.
+
+Every pluggable piece registers with :mod:`repro.api.registry` as an import
+side effect of this package: engines ``"continuous"``
+(:class:`ContinuousEngine`) and ``"static"`` (:class:`BatchedServer`),
+scheduler policies ``"fifo"``/``"ljf"``, and the ``"budget"`` admission
+controller — all reachable by name from a declarative ``ServeSpec``
+(``repro.api.run``).
 """
 from repro.runtime.engine import (ContinuousEngine, ServeReport,
                                   reference_generate)
@@ -13,9 +20,10 @@ from repro.runtime.kvcache import KVCachePool
 from repro.runtime.queue import (AdmissionController, RequestQueue,
                                  ServeRequest)
 from repro.runtime.scheduler import (Scheduler, VirtualClock, WallClock,
-                                     straggler_arrivals)
+                                     make_clock, straggler_arrivals)
+from repro.runtime.static import BatchedServer, Request
 
-__all__ = ["AdmissionController", "ContinuousEngine", "KVCachePool",
-           "RequestQueue", "Scheduler", "ServeReport", "ServeRequest",
-           "VirtualClock", "WallClock", "reference_generate",
-           "straggler_arrivals"]
+__all__ = ["AdmissionController", "BatchedServer", "ContinuousEngine",
+           "KVCachePool", "Request", "RequestQueue", "Scheduler",
+           "ServeReport", "ServeRequest", "VirtualClock", "WallClock",
+           "make_clock", "reference_generate", "straggler_arrivals"]

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.registry import register_engine
 from repro.models import build_model
 from repro.runtime.kvcache import KVCachePool
 from repro.runtime.queue import ServeRequest
@@ -57,6 +58,7 @@ class ServeReport:
     max_active: int
     step_active: List[int]
     per_request: List[Dict[str, Any]]
+    verified: Optional[Dict[str, Any]] = None   # token-identity audit
 
     @property
     def requests_per_s(self) -> float:
@@ -69,7 +71,7 @@ class ServeReport:
     def to_json(self) -> Dict[str, Any]:
         ttft = _percentiles([r["ttft_ms"] for r in self.per_request])
         lat = _percentiles([r["latency_ms"] for r in self.per_request])
-        return {"engine": self.engine, "arch": self.arch,
+        out = {"engine": self.engine, "arch": self.arch,
                 "wall_s": round(self.wall_s, 4),
                 "num_requests": self.num_requests,
                 "prefill_tokens": self.prefill_tokens,
@@ -81,6 +83,9 @@ class ServeReport:
                 "decode_tok_per_s": round(self.decode_tok_per_s, 2),
                 "ttft_ms": ttft, "latency_ms": lat,
                 "per_request": self.per_request}
+        if self.verified is not None:
+            out["verified"] = self.verified
+        return out
 
     def summary(self) -> str:
         ttft = _percentiles([r["ttft_ms"] for r in self.per_request])
@@ -99,6 +104,7 @@ def _resolve_now(now) -> float:
     return now() if callable(now) else now
 
 
+@register_engine("continuous")
 class ContinuousEngine:
     """Slot-pool decode engine. The scheduler drives admit()/step().
 
@@ -108,14 +114,14 @@ class ContinuousEngine:
     continuous outputs are not comparable for vlm archs."""
 
     def __init__(self, cfg, params=None, *, num_slots: int,
-                 slot_len: int, seed: int = 0):
+                 slot_len: int, seed: int = 0, model=None):
         if cfg.family == "audio":
             raise NotImplementedError(
                 "the encoder-decoder family decodes with a scalar position "
                 "(learned absolute embeddings) and is not served by the "
                 "continuous runtime; use the static server")
         self.cfg = cfg
-        self.model = build_model(cfg)
+        self.model = model if model is not None else build_model(cfg)
         self.params = (params if params is not None
                        else self.model.init(jax.random.PRNGKey(seed)))
         self.pool = KVCachePool(self.model, num_slots, slot_len)
@@ -138,6 +144,28 @@ class ContinuousEngine:
         self.steps = 0
         self.decode_tokens = 0
         self.prefill_tokens = 0
+
+    @classmethod
+    def from_spec(cls, cfg, spec, params=None,
+                  model=None) -> "ContinuousEngine":
+        """Engine sized by a ServeSpec (resolved slots/slot_len/seed);
+        pass ``model`` to adopt an already-built module tree for ``cfg``."""
+        return cls(cfg, params=params, num_slots=spec.resolved_num_slots(),
+                   slot_len=spec.resolved_slot_len(), seed=spec.engine.seed,
+                   model=model)
+
+    def serve(self, requests: List[ServeRequest], spec,
+              clock=None) -> ServeReport:
+        """One spec-driven serving run: scheduler stack from the spec's
+        admission/scheduler/clock sub-specs, then drain ``requests``.
+
+        Resets per-request bookkeeping first (compiled functions survive),
+        so one engine can serve warmup + timed passes back to back.
+        """
+        from repro.runtime.scheduler import Scheduler
+        if self.steps or self.records:
+            self.reset()
+        return Scheduler.from_spec(self, spec, clock=clock).run(requests)
 
     def reset(self) -> None:
         """Forget all requests/stats but keep params and compiled fns.

@@ -23,6 +23,8 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.api.registry import register_admission_policy
+
 
 @dataclasses.dataclass
 class ServeRequest:
@@ -76,6 +78,7 @@ class RequestQueue:
         return bool(self._heap)
 
 
+@register_admission_policy("budget")
 class AdmissionController:
     """Holds the per-step decode token budget fixed at ``token_budget``.
 
@@ -83,6 +86,12 @@ class AdmissionController:
     and reports every decode step through ``note_step(active)`` so the
     invariant (active ≤ budget at every step) is auditable after the fact via
     ``step_active``/``max_active``.
+
+    This is the registered ``"budget"`` admission policy (the GPSL
+    invariant, served); alternatives plug in via
+    ``repro.api.register_admission_policy`` and one ``admission.policy``
+    spec field, with the same ``grants``/``note_admit``/``note_step``
+    surface.
     """
 
     def __init__(self, token_budget: int):

@@ -1,45 +1,56 @@
 """Interleaved prefill/decode scheduling with straggler-aware arrivals.
 
 The loop alternates admission (prefill into freed slots, up to the token
-budget; ``policy="fifo"`` admits by arrival, ``"ljf"`` longest-job-first
-for tail occupancy) with decode steps over the pool. Straggler handling mirrors the
+budget) with decode steps over the pool; the admission *order* is a
+registered scheduler policy (``"fifo"`` admits by arrival, ``"ljf"``
+longest-job-first for tail occupancy — add more via
+``repro.api.register_scheduler_policy``). Straggler handling mirrors the
 paper's serving lesson: a decode step **never waits** for a request that has
 not arrived — the deadline for joining a step is "be in the queue when the
 step starts". Late prompts (delays drawn from
-repro.core.straggler.assign_delays, the same module the training simulator
-uses) therefore cost only their own TTFT, not everyone else's step time; the
-static server by contrast cannot start until its whole batch is assembled.
+repro.core.straggler.straggler_arrivals, the same delay model the training
+simulator uses) therefore cost only their own TTFT, not everyone else's step
+time; the static server by contrast cannot start until its whole batch is
+assembled.
 
 Clocks are pluggable: ``WallClock`` serves real time (idle waits sleep until
 the next arrival); ``VirtualClock`` advances a deterministic tick per engine
 operation so tests can replay randomized arrival/completion traces instantly.
+
+``Scheduler.from_spec`` builds the whole stack — clock, admission
+controller, and ordering policy resolved through the registries — from a
+declarative ``ServeSpec`` (repro.api.specs); hand construction stays
+available for programmatic use.
 """
 from __future__ import annotations
 
 import time
 from typing import List, Optional, Sequence
 
-import numpy as np
-
-from repro.core.straggler import assign_delays
+from repro.api.registry import (get_admission_policy, get_scheduler_policy,
+                                register_scheduler_policy)
+# re-export (compat): the one shared arrival model lives in repro.core
+from repro.core.straggler import straggler_arrivals  # noqa: F401
 from repro.runtime.engine import ContinuousEngine, ServeReport
-from repro.runtime.queue import (AdmissionController, RequestQueue,
-                                 ServeRequest)
+from repro.runtime.queue import RequestQueue, ServeRequest
 
 
-def straggler_arrivals(num_requests: int, p_straggler: float = 0.2,
-                       w_min: float = 50.0, w_max: float = 500.0,
-                       seed: int = 0, time_scale: float = 1e-3) -> np.ndarray:
-    """Arrival times (s) for a request trace with straggling edge clients.
+@register_scheduler_policy("fifo")
+class FifoPolicy:
+    """Arrival-fair admission: grant freed budget to the oldest prompt."""
 
-    Reuses the training-side delay model (repro.core.straggler.assign_delays,
-    paper Sec. V-B): each client straggles with probability ``p_straggler``
-    and its prompt arrives ``U[w_min, w_max]`` ms late; ``time_scale``
-    converts ms of model time into scheduler seconds.
-    """
-    delays_ms = assign_delays(num_requests, p_straggler, w_min, w_max,
-                              seed=seed)
-    return delays_ms * time_scale
+    def order(self, ready: List[ServeRequest]) -> None:
+        pass                        # the queue already yields arrival order
+
+
+@register_scheduler_policy("ljf")
+class LongestJobFirstPolicy:
+    """Longest-job-first keeps tail occupancy high: big completions start
+    early and short ones backfill, so makespan tracks the longest request,
+    not FIFO luck."""
+
+    def order(self, ready: List[ServeRequest]) -> None:
+        ready.sort(key=lambda r: -r.max_new_tokens)
 
 
 class WallClock:
@@ -77,16 +88,24 @@ class VirtualClock:
         self._t += self.tick_s
 
 
+def make_clock(kind: str = "wall", tick_s: float = 1e-3):
+    """Clock instance for a ClockSpec (``"wall"`` or ``"virtual"``)."""
+    if kind == "wall":
+        return WallClock()
+    if kind == "virtual":
+        return VirtualClock(tick_s)
+    raise ValueError(f"unknown clock kind {kind!r}")
+
+
 class Scheduler:
     """Drives a ContinuousEngine from a RequestQueue under a fixed budget."""
 
     def __init__(self, engine: ContinuousEngine,
                  token_budget: Optional[int] = None, clock=None,
                  max_admits_per_step: Optional[int] = None,
-                 policy: str = "fifo"):
-        if policy not in ("fifo", "ljf"):
-            raise ValueError(f"unknown admission policy {policy!r}")
+                 policy: str = "fifo", admission: str = "budget"):
         self.policy = policy
+        self._policy = get_scheduler_policy(policy)()
         self.engine = engine
         budget = (token_budget if token_budget is not None
                   else engine.pool.num_slots)
@@ -94,12 +113,30 @@ class Scheduler:
             raise ValueError(
                 f"token budget {budget} exceeds pool capacity "
                 f"{engine.pool.num_slots}: budgeted slots must exist")
-        self.admission = AdmissionController(budget)
+        self.admission = get_admission_policy(admission)(budget)
         self.queue = RequestQueue()
         self.clock = clock if clock is not None else WallClock()
         if max_admits_per_step is not None and max_admits_per_step < 1:
             raise ValueError("max_admits_per_step must be >= 1 (or None)")
         self.max_admits_per_step = max_admits_per_step
+
+    @classmethod
+    def from_spec(cls, engine: ContinuousEngine, spec,
+                  clock=None) -> "Scheduler":
+        """Build the scheduling stack a ServeSpec describes around ``engine``.
+
+        Policies resolve through the registries
+        (``spec.scheduler.policy`` / ``spec.admission.policy``); the clock
+        comes from ``spec.clock`` unless one is passed explicitly.
+        """
+        if clock is None:
+            clock = make_clock(spec.clock.kind, spec.clock.tick_s)
+        return cls(engine,
+                   token_budget=spec.admission.token_budget,
+                   clock=clock,
+                   max_admits_per_step=spec.admission.max_admits_per_step,
+                   policy=spec.scheduler.policy,
+                   admission=spec.admission.policy)
 
     def submit(self, requests: Sequence[ServeRequest]) -> None:
         for r in requests:
@@ -117,13 +154,9 @@ class Scheduler:
             arrived = self.queue.poll(clock.now())
             if arrived:
                 ready.extend(arrived)
-                if self.policy == "ljf":
-                    # longest-job-first keeps tail occupancy high: big
-                    # completions start early and short ones backfill, so
-                    # makespan tracks the longest request, not FIFO luck.
-                    ready.sort(key=lambda r: -r.max_new_tokens)
-            # Admission: grant freed budget to the ready head (FIFO: oldest
-            # first); same-length requests in a grant share a prefill call.
+                self._policy.order(ready)
+            # Admission: grant freed budget in policy order; same-length
+            # requests in a grant share a prefill call.
             admits = adm.grants(eng.num_active())
             if self.max_admits_per_step is not None:
                 admits = min(admits, self.max_admits_per_step)

@@ -1,0 +1,145 @@
+"""Static-batch generation engine — the A/B baseline for the runtime.
+
+One batch, assembled up front: every request pays the maximum prompt length
+(LEFT-padded; see docs/serving.md for the canonical padding discussion) and
+rides every decode step to the maximum output length, and nothing is
+admitted mid-flight. This is exactly the batch-inflation failure the
+continuous runtime removes, kept behind the ``"static"`` entry of the
+engine registry so spec sweeps can A/B the two engines by flipping
+``engine.name``.
+
+Scope notes carried over from the launch script it was folded out of:
+the static path serves every model family (including the encoder-decoder
+audio family the continuous engine rejects); VLM/audio configs get
+zero-filled patches/frames occupying real positions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.registry import register_engine
+from repro.models import build_model
+from repro.runtime.engine import ServeReport
+from repro.runtime.queue import ServeRequest
+
+
+@dataclasses.dataclass
+class Request:
+    """Legacy request record for ``BatchedServer.generate`` callers."""
+    rid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+
+@register_engine("static")
+class BatchedServer:
+    """Static-batch generation engine with greedy decoding.
+
+    Kept as the A/B baseline for the continuous runtime. Note its batch
+    inflation: every request pays max prompt length and max output length,
+    and nothing is admitted mid-flight.
+    """
+
+    def __init__(self, cfg, params=None, seed: int = 0, *, model=None):
+        self.cfg = cfg
+        self.model = model if model is not None else build_model(cfg)
+        self.params = params if params is not None else self.model.init(
+            jax.random.PRNGKey(seed))
+        self._decode = jax.jit(self.model.decode_step,
+                               donate_argnums=(1,))
+        self._prefills: Dict[int, callable] = {}   # cache_len -> jitted
+
+    @classmethod
+    def from_spec(cls, cfg, spec, params=None,
+                  model=None) -> "BatchedServer":
+        return cls(cfg, params=params, seed=spec.engine.seed, model=model)
+
+    def _prefill(self, cache_len: int):
+        if cache_len not in self._prefills:
+            self._prefills[cache_len] = jax.jit(functools.partial(
+                self.model.prefill, cache_len=cache_len))
+        return self._prefills[cache_len]
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        cfg = self.cfg
+        b = len(requests)
+        plen = max(len(r.prompt) for r in requests)
+        max_new = max(r.max_new_tokens for r in requests)
+        cache_len = plen + max_new
+        prompts = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(requests):
+            # Static batching LEFT-pads: prompts are right-aligned so every
+            # row decodes at one shared scalar position. Pad-token KV stays
+            # visible to real tokens, so mixed-length static batches are not
+            # token-identical to unpadded decoding; the continuous runtime
+            # avoids padding entirely. Canonical discussion: docs/serving.md.
+            prompts[i, plen - len(r.prompt):] = r.prompt
+        batch = {"tokens": jnp.asarray(prompts)}
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.zeros((b, cfg.num_patches, cfg.d_model),
+                                         cfg.jnp_dtype)
+        if cfg.family == "audio":
+            batch["frames"] = jnp.zeros((b, cfg.encoder_seq, cfg.d_model),
+                                        cfg.jnp_dtype)
+        logits, cache, pos = self._prefill(cache_len)(self.params, batch)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        for i, r in enumerate(requests):
+            r.generated.append(int(tok[i, 0]))
+        self._t_first = time.perf_counter()      # post-prefill sync: TTFT
+        for step in range(1, max_new):
+            logits, cache = self._decode(self.params, cache, tok, pos)
+            pos = pos + 1
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            for i, r in enumerate(requests):
+                if step < r.max_new_tokens:
+                    r.generated.append(int(tok[i, 0]))
+        return requests
+
+    def serve(self, requests: List[ServeRequest], spec=None,
+              clock=None) -> ServeReport:
+        """Spec-driven entry: one static batch over ``requests``.
+
+        The static engine cannot honor staggered arrivals (the batch is
+        assembled up front), so `arrival_s` is ignored; TTFT is stamped at
+        the end of the padded batch prefill for every row and latency at
+        batch completion — the batch-inflation cost made visible. ``clock``
+        is unused (wall timing only); the parameter keeps the
+        engine-registry `serve` signature uniform.
+        """
+        legacy = [Request(rid=r.rid, prompt=r.prompt,
+                          max_new_tokens=r.max_new_tokens)
+                  for r in requests]
+        b = len(legacy)
+        plen = max(len(r.prompt) for r in legacy)
+        max_new = max(r.max_new_tokens for r in legacy)
+        t0 = time.perf_counter()
+        out = self.generate(legacy)
+        wall = time.perf_counter() - t0
+        ttft_ms = (self._t_first - t0) * 1e3
+        per_request = []
+        for r in sorted(out, key=lambda r: r.rid):
+            per_request.append({
+                "rid": r.rid, "prompt_len": int(len(r.prompt)),
+                "new_tokens": len(r.generated),
+                "arrival_s": 0.0,
+                "ttft_ms": ttft_ms,
+                # one batch: every row waits for the whole cohort
+                "latency_ms": wall * 1e3,
+                "tokens": list(r.generated)})
+        return ServeReport(
+            engine="static", arch=self.cfg.name, wall_s=wall,
+            num_requests=b,
+            prefill_tokens=b * plen,            # padded: max×batch
+            # every row rides all max_new - 1 decode steps, finished or not
+            decode_tokens=b * (max_new - 1),
+            steps=max_new - 1, token_budget=None,
+            max_active=b, step_active=[b] * max(max_new - 1, 0),
+            per_request=per_request)

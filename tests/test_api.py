@@ -280,6 +280,57 @@ def test_all_legacy_entry_points_run_via_shims():
     assert hists["psl_sharded"].extras["sharding_fallbacks"] is not None
 
 
+def test_every_shim_warns_deprecation_and_matches_api_run():
+    """Each of the six legacy ``train_*`` entry points emits a
+    DeprecationWarning and returns the exact trajectory ``api.run(spec)``
+    produces for the equivalent spec (same seeds, same callbacks)."""
+    from repro.frameworks import (train_cl, train_fl, train_psl,
+                                  train_psl_sharded, train_sfl, train_sl)
+    X, y = make_classification_dataset(300, image_size=16, seed=0)
+    Xt, yt = make_classification_dataset(80, image_size=16, seed=99)
+    parts, pop = partition_dirichlet(y, 4, 10, seed=1)
+    store = ClientStore.from_partition(X, y, parts, pop)
+    model = CNNModel(get_config("paper-cnn", reduced=True))
+    mk = lambda: optim.sgd(5e-2, momentum=0.9)
+
+    def spec_for(protocol, engine="fused"):
+        return api.ExperimentSpec(
+            seed=0,
+            model=api.ModelSpec(arch="paper-cnn", reduced=True),
+            optimizer=api.OptimizerSpec(name="sgd", lr=5e-2, momentum=0.9,
+                                        weight_decay=0.0),
+            data=api.DataSpec(num_train=300, num_test=80, image_size=16,
+                              num_clients=4),
+            protocol=api.ProtocolSpec(name=protocol, epochs=1,
+                                      batch_size=16,
+                                      global_batch_size=32),
+            execution=api.ExecutionSpec(engine=engine))
+
+    shim_calls = {
+        "cl": lambda: train_cl(model, mk(), X, y, (Xt, yt), epochs=1,
+                               batch_size=16, seed=0),
+        "sl": lambda: train_sl(model, mk(), store, (Xt, yt), epochs=1,
+                               batch_size=16, seed=0),
+        "fl": lambda: train_fl(model, mk(), store, (Xt, yt), epochs=1,
+                               batch_size=16, seed=0),
+        "sfl": lambda: train_sfl(model, mk(), store, (Xt, yt), epochs=1,
+                                 batch_size=16, seed=0),
+        "psl": lambda: train_psl(model, mk(), store, (Xt, yt), epochs=1,
+                                 global_batch_size=32, seed=0),
+        "psl_sharded": lambda: train_psl_sharded(
+            model, mk(), store, (Xt, yt), epochs=1, global_batch_size=32,
+            seed=0),
+    }
+    for name, call in shim_calls.items():
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            hist = call()
+        protocol = "psl" if name.startswith("psl") else name
+        engine = "sharded" if name == "psl_sharded" else "fused"
+        got = api.run(spec_for(protocol, engine))
+        assert hist.test_acc == got.test_acc, name        # bitwise
+        assert set(hist.extras) == set(got.history.extras), name
+
+
 def test_run_with_prebuilt_ctx_honors_the_passed_spec():
     base = small_spec(epochs=1)
     ctx = api.build_context(base)
