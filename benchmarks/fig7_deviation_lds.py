@@ -1,14 +1,27 @@
 """Paper Fig. 7: batch deviation of LDS vs UGS for Δ ∈ {0, 0.5, 1.0, 1.5}
-with stragglers present, IID and non-IID. Exact reproduction."""
+with stragglers present, IID and non-IID. Exact reproduction.
+
+Standalone: ``python benchmarks/fig7_deviation_lds.py [--smoke]`` — the
+``--smoke`` grid (one geometry, two Δ) is what CI runs."""
 from __future__ import annotations
 
+import argparse
+import pathlib
+import sys
 import time
 
-import numpy as np
+for _p in [str(p) for p in (pathlib.Path(__file__).resolve().parent.parent,
+                            pathlib.Path(__file__).resolve().parent.parent
+                            / "src")]:
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
-from repro.core import assign_delays, lds_plan, simulate_plan_deviation, ugs_plan
-from benchmarks.fig6_deviation import _make_pop
-from benchmarks.common import Csv
+import numpy as np                                         # noqa: E402
+
+from repro.core import (assign_delays, lds_plan,           # noqa: E402
+                        simulate_plan_deviation, ugs_plan)
+from benchmarks.fig6_deviation import _make_pop            # noqa: E402
+from benchmarks.common import Csv                          # noqa: E402
 
 
 def run(csv: Csv, quick: bool = False):
@@ -35,6 +48,10 @@ def run(csv: Csv, quick: bool = False):
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: one geometry per regime, two Δ values")
+    args = ap.parse_args()
     c = Csv()
     c.header()
-    run(c)
+    run(c, quick=args.smoke)

@@ -23,7 +23,7 @@ import numpy as np
 from repro.api.evaluation import batch_from
 from repro.api.registry import ProtocolStrategy, StepItem, register_protocol
 from repro.core import sampling as sampling_lib
-from repro.core.psl import make_train_step, slot_weights
+from repro.core.psl import make_train_step, slot_weights_segments
 from repro.data.federated import GlobalBatchIterator
 from repro.optim import TrainState
 
@@ -224,26 +224,31 @@ def lm_plan_batches(data: List[np.ndarray], pop, plan, seq_len: int,
     cursors = np.zeros(len(data), np.int64)
     b = plan.global_batch_size
     for t in range(plan.num_steps):
-        sizes = plan.local_batch_sizes[t]
-        rows, ids = [], []
-        # visit clients grouped by home shard so the leading-axis split
-        # sends each shard (mostly) its own clients' slots
-        for k in np.argsort(shard_of_client, kind="stable"):
-            n = int(sizes[k])
-            if n == 0:
-                continue
+        # stream the step's active-client segment; only active clients are
+        # visited (same visit order as the old dense scan: segment ids are
+        # ascending, and the stable argsort groups them by home shard)
+        seg_ids, seg_cnts = plan.step_segments(t)
+        seg_ids = np.asarray(seg_ids, np.int64)
+        rows, ids, cnt_runs = [], [], []
+        for j in np.argsort(shard_of_client[seg_ids], kind="stable"):
+            k = int(seg_ids[j])
+            n = int(seg_cnts[j])
             idx = orders[k][cursors[k]:cursors[k] + n]
             cursors[k] += n
             rows.append(data[k][idx])
             ids.append(np.full(n, k))
+            cnt_runs.append(np.full(n, n))
         toks = np.concatenate(rows)
         cids = np.concatenate(ids)
+        slot_cnts = np.concatenate(cnt_runs)
         if toks.shape[0] < b:
             pad = b - toks.shape[0]
             toks = np.concatenate(
                 [toks, np.zeros((pad, toks.shape[1]), toks.dtype)])
             cids = np.concatenate([cids, np.full(pad, -1)])
-        w = slot_weights(cids, sizes, pop.dataset_sizes, aggregation)
+            slot_cnts = np.concatenate([slot_cnts, np.ones(pad, np.int64)])
+        w = slot_weights_segments(cids, slot_cnts, pop.dataset_sizes,
+                                  aggregation)
         yield {"tokens": toks[:, :seq_len].astype(np.int32),
                "labels": toks[:, 1:seq_len + 1].astype(np.int32),
                "weights": np.repeat(w[:, None], seq_len, 1)}
@@ -291,7 +296,8 @@ class PSLStrategy(ProtocolStrategy):
         return sampling_lib.make_plan(
             ctx.sampler.method, ctx.data.pop,
             ctx.protocol.global_batch_size, seed=ctx.seed + epoch,
-            backend=ctx.sampler.backend, **ctx.sampler.kwargs)
+            backend=ctx.sampler.backend,
+            plan_format=ctx.sampler.plan_format, **ctx.sampler.kwargs)
 
     def epoch_batches(self, ctx, pstate, plan, epoch) -> Iterator[StepItem]:
         engine = pstate["engine"]
@@ -317,7 +323,7 @@ class PSLStrategy(ProtocolStrategy):
                 info = None
                 if ctx.protocol.track_tpe:
                     from repro.launch.distributed import step_timing
-                    tm = step_timing(plan.local_batch_sizes[gb["step"]],
+                    tm = step_timing(plan.step_sizes(gb["step"]),
                                      ctx.data.pop.delays,
                                      pstate["shard_of_client"],
                                      engine.num_shards,

@@ -198,9 +198,16 @@ class DataSpec(SpecBase):
 
 @dataclasses.dataclass(frozen=True)
 class SamplerSpec(SpecBase):
-    """Global sampling policy (repro.core.sampling.make_plan arguments)."""
+    """Global sampling policy (repro.core.sampling.make_plan arguments).
+
+    ``plan_format`` picks the epoch-plan representation: "dense" — the
+    (T, K) matrix; "sparse" — per-step active-client segments (O(T·B)
+    memory, the million-client path); "auto" — sparse once the dense matrix
+    would be large. Draws are format-independent.
+    """
     method: str = "ugs"
     backend: str = "numpy"
+    plan_format: str = "dense"
     kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def validate(self) -> "SamplerSpec":
@@ -208,6 +215,8 @@ class SamplerSpec(SpecBase):
                       f"unknown sampling method {self.method!r}")
         self._require(self.backend in ("numpy", "jax", "auto"),
                       f"unknown planner backend {self.backend!r}")
+        self._require(self.plan_format in ("dense", "sparse", "auto"),
+                      f"unknown plan format {self.plan_format!r}")
         return self
 
 

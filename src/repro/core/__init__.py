@@ -5,25 +5,30 @@ frameworks/, launch/); this package holds the sampling orchestration —
 UGS, LDS, the EM-MAP estimator, deviation analytics, partitioning, and the
 straggler model — plus the PSL protocol itself (psl.py).
 """
-from repro.core.types import ClientPopulation, EpochPlan
+from repro.core.types import (ClientPopulation, EpochPlan, SparseEpochPlan,
+                              SparsePlanBuilder)
 from repro.core.sampling import (fls_plan, fpls_plan, lds_plan, make_plan,
-                                 ugs_plan)
+                                 resolve_plan_format, ugs_plan)
 from repro.core.em import (EMResult, em_map, em_map_jax, em_update_jax,
                            log_posterior)
 from repro.core.planner import (lds_plan_jax, resolve_backend, ugs_plan_jax)
 from repro.core.deviation import (batch_deviation, lemma1_bound, lemma2_bound,
-                                  lemma2_terms, simulate_plan_deviation)
+                                  lemma2_terms, serfling_bound,
+                                  serfling_epsilon, simulate_plan_deviation)
 from repro.core.partition import partition_dirichlet, partition_iid
 from repro.core.straggler import (adjust_concentration, assign_delays,
                                   delay_zscores, simulate_tpe,
                                   straggler_arrivals)
 
 __all__ = [
-    "ClientPopulation", "EpochPlan", "make_plan", "ugs_plan", "lds_plan",
+    "ClientPopulation", "EpochPlan", "SparseEpochPlan", "SparsePlanBuilder",
+    "make_plan", "ugs_plan", "lds_plan",
     "fpls_plan", "fls_plan", "ugs_plan_jax", "lds_plan_jax",
-    "resolve_backend", "EMResult", "em_map", "em_map_jax", "em_update_jax",
+    "resolve_backend", "resolve_plan_format", "EMResult", "em_map",
+    "em_map_jax", "em_update_jax",
     "log_posterior", "batch_deviation", "lemma1_bound", "lemma2_bound",
-    "lemma2_terms", "simulate_plan_deviation", "partition_dirichlet",
+    "lemma2_terms", "serfling_bound", "serfling_epsilon",
+    "simulate_plan_deviation", "partition_dirichlet",
     "partition_iid", "adjust_concentration", "assign_delays",
     "delay_zscores", "simulate_tpe", "straggler_arrivals",
 ]

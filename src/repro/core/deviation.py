@@ -53,6 +53,33 @@ def lemma2_bound(local_batch_sizes: np.ndarray, beta: np.ndarray,
     return (t["variance"] + t["bias_sq"]) / (t["batch_size"] ** 2 * eps ** 2)
 
 
+def serfling_bound(batch_size: int, total: int, eps: float) -> float:
+    """Serfling (1974) tail bound for sampling without replacement.
+
+    For B draws uniformly without replacement from a population of D items,
+    of which a fraction β_0m belong to class m,
+
+        P(|Y_m/B − β_0m| ≥ ε) ≤ 2·exp(−2Bε² / (1 − (B−1)/D)).
+
+    This is the paper's distributional-equivalence guarantee for a GPSL
+    global batch: its class histogram concentrates around β_0 exactly as a
+    centralized uniform without-replacement batch does (and *tighter* than
+    the with-replacement Hoeffding bound by the finite-population factor).
+    """
+    b = int(batch_size)
+    d = max(int(total), 1)
+    f = max(1.0 - (b - 1.0) / d, 1e-12)
+    return float(2.0 * np.exp(-2.0 * b * eps * eps / f))
+
+
+def serfling_epsilon(batch_size: int, total: int, delta: float) -> float:
+    """Invert :func:`serfling_bound`: the ε with tail mass exactly δ."""
+    b = int(batch_size)
+    d = max(int(total), 1)
+    f = max(1.0 - (b - 1.0) / d, 1e-12)
+    return float(np.sqrt(f * np.log(2.0 / delta) / (2.0 * b)))
+
+
 @dataclasses.dataclass(frozen=True)
 class DeviationStats:
     mean: float
@@ -70,19 +97,24 @@ def simulate_plan_deviation(plan: EpochPlan, pop: ClientPopulation,
     step 1; the resulting global-batch class counts are measured against
     beta_0. ``with_replacement=True`` switches to the multinomial
     approximation used in the paper's analysis.
+
+    Accepts dense and sparse plans alike: draws stream the per-step
+    active-client segments in ascending client order — the same clients in
+    the same order as a dense row scan that skips zero rows, so results
+    are bit-identical across plan formats.
     """
     rng = np.random.default_rng(seed)
     beta0 = pop.overall_distribution
     remaining = pop.class_counts.copy()                   # (K, M)
-    t_steps, k = plan.local_batch_sizes.shape
+    t_steps = plan.num_steps
     m = pop.num_classes
     devs = np.zeros(t_steps)
     for t in range(t_steps):
         counts = np.zeros(m, dtype=np.int64)
-        for ki in range(k):
-            n = int(plan.local_batch_sizes[t, ki])
-            if n == 0:
-                continue
+        ids, cnts = plan.step_segments(t)
+        for ki, n in zip(ids, cnts):
+            ki = int(ki)
+            n = int(n)
             if with_replacement:
                 p = remaining[ki] / max(remaining[ki].sum(), 1)
                 draw = rng.multinomial(n, p)

@@ -51,7 +51,8 @@ def _m_step_np(n_k: np.ndarray, alpha: np.ndarray, n_total: float,
 
 def em_map(nu: np.ndarray, pi_init: np.ndarray, beta: np.ndarray,
            alpha: np.ndarray, tau: float = 1e-5, max_iters: int = 10_000,
-           active: Optional[np.ndarray] = None) -> EMResult:
+           active: Optional[np.ndarray] = None,
+           client_chunk: Optional[int] = None) -> EMResult:
     """MAP-EM for the mixture proportions pi (Algorithm 2, class-wise form).
 
     Args:
@@ -62,6 +63,11 @@ def em_map(nu: np.ndarray, pi_init: np.ndarray, beta: np.ndarray,
       tau:   convergence threshold on ||pi_new - pi_old||_2.
       active: (K,) bool mask of alive mixture components (non-depleted
         clients). Inactive components are held at exactly 0.
+      client_chunk: when set, the E-step processes clients in chunks of this
+        size so peak temporary memory is O(client_chunk · M) instead of
+        O(K · M) — the million-client regime. Same fixed point and
+        iteration count as the unchunked solve up to summation-order
+        rounding (validated in tests/test_em.py).
     """
     nu = np.asarray(nu, dtype=np.float64)
     beta = np.asarray(beta, dtype=np.float64)
@@ -72,16 +78,29 @@ def em_map(nu: np.ndarray, pi_init: np.ndarray, beta: np.ndarray,
     pi_new = np.where(active, pi_init, 0.0)
     pi_new = pi_new / max(pi_new.sum(), _EPS)
     n_total = float(nu.sum())
+    chunked = client_chunk is not None and 0 < int(client_chunk) < k
 
     iters = 0
     converged = False
     while iters < max_iters:
         pi_old = pi_new
-        # E-step: class-wise responsibilities gamma_hat (K, M), Eq. (5).
-        w = pi_old[:, None] * beta                      # (K, M)
-        denom = np.maximum(w.sum(axis=0, keepdims=True), _EPS)
-        gamma_hat = w / denom
-        n_k = gamma_hat @ nu                            # (K,)
+        if chunked:
+            # Two streaming passes over client chunks: the mixture
+            # marginal, then the responsibility-weighted counts.
+            c = int(client_chunk)
+            mix = np.zeros_like(nu)
+            for s in range(0, k, c):
+                mix += pi_old[s:s + c] @ beta[s:s + c]
+            scaled = nu / np.maximum(mix, _EPS)
+            n_k = np.empty(k, dtype=np.float64)
+            for s in range(0, k, c):
+                n_k[s:s + c] = pi_old[s:s + c] * (beta[s:s + c] @ scaled)
+        else:
+            # E-step: class-wise responsibilities gamma_hat (K, M), Eq. (5).
+            w = pi_old[:, None] * beta                      # (K, M)
+            denom = np.maximum(w.sum(axis=0, keepdims=True), _EPS)
+            gamma_hat = w / denom
+            n_k = gamma_hat @ nu                            # (K,)
         # M-step: Proposition 1.
         pi_new = _m_step_np(n_k, alpha, n_total, active)
         iters += 1
@@ -112,13 +131,17 @@ def log_posterior(pi: np.ndarray, nu: np.ndarray, beta: np.ndarray,
 # ---------------------------------------------------------------------------
 
 def em_update_jax(nu, pi_init, beta, alpha, active, tau,
-                  max_iters: int) -> Tuple:
+                  max_iters: int, client_chunk: Optional[int] = None
+                  ) -> Tuple:
     """Pure traceable MAP-EM core: (pi, iterations, final ||Δpi||).
 
     All array arguments may be concrete values *or* tracers — this is the
     function the vectorized epoch planner (:mod:`repro.core.planner`) inlines
     inside its jitted LDS draw loop so that every ``RemoveComponent``
-    re-estimation stays on-device. Only ``max_iters`` must be a static int.
+    re-estimation stays on-device. Only ``max_iters`` and ``client_chunk``
+    must be static ints. With ``client_chunk`` set, the two E-step matvecs
+    run as a ``lax.scan`` over client chunks, bounding the temporaries XLA
+    materializes to O(client_chunk · M).
     """
     import jax
     import jax.numpy as jnp
@@ -137,19 +160,46 @@ def em_update_jax(nu, pi_init, beta, alpha, active, tau,
     alpha0 = jnp.where(active, alpha, 0.0).sum()
     denom_m = jnp.maximum(n_total + alpha0 - k_active, _EPS)
 
-    # (M, K) copy so both matvecs below reduce along their contiguous axis
-    beta_t = beta.T
+    k = pi0.shape[0]
+    chunked = client_chunk is not None and 0 < int(client_chunk) < k
 
-    def update(pi_old):
-        # E+M step in matvec form: n_k = sum_m gamma_km nu_m with
-        # gamma_km = pi_k beta_km / mix_m and mix = beta^T pi. Algebraically
-        # identical to materializing the (K, M) responsibilities (the
-        # NumPy reference's literal Eq. 5 form) but needs only two matvecs.
-        mix = jnp.maximum(beta_t @ pi_old, _EPS)        # (M,)
-        n_k = pi_old * (beta @ (nu / mix))              # (K,)
+    def m_step(n_k):
         pi = jnp.where(active, (n_k + alpha - 1.0) / denom_m, 0.0)
         pi = jnp.maximum(pi, jnp.where(active, _PI_FLOOR, 0.0))
         return pi / jnp.maximum(pi.sum(), _EPS)
+
+    if chunked:
+        c = int(client_chunk)
+        n_chunks = -(-k // c)
+        pad = n_chunks * c - k
+        # Zero-padded clients contribute 0 to mix and are sliced off n_k.
+        beta_c = jnp.pad(beta, ((0, pad), (0, 0))).reshape(
+            n_chunks, c, beta.shape[1])
+
+        def update(pi_old):
+            pi_c = jnp.pad(pi_old, (0, pad)).reshape(n_chunks, c)
+            mix, _ = jax.lax.scan(
+                lambda acc, xs: (acc + xs[1] @ xs[0], None),
+                jnp.zeros_like(nu), (beta_c, pi_c))
+            scaled = nu / jnp.maximum(mix, _EPS)
+            _, nk_c = jax.lax.scan(
+                lambda _, xs: (None, xs[1] * (xs[0] @ scaled)),
+                None, (beta_c, pi_c))
+            return m_step(nk_c.reshape(-1)[:k])
+    else:
+        # (M, K) copy so both matvecs below reduce along their contiguous
+        # axis
+        beta_t = beta.T
+
+        def update(pi_old):
+            # E+M step in matvec form: n_k = sum_m gamma_km nu_m with
+            # gamma_km = pi_k beta_km / mix_m and mix = beta^T pi.
+            # Algebraically identical to materializing the (K, M)
+            # responsibilities (the NumPy reference's literal Eq. 5 form)
+            # but needs only two matvecs.
+            mix = jnp.maximum(beta_t @ pi_old, _EPS)        # (M,)
+            n_k = pi_old * (beta @ (nu / mix))              # (K,)
+            return m_step(n_k)
 
     def body(carry):
         # two updates per loop trip: the convergence check (and the CPU
@@ -183,30 +233,35 @@ def em_update_jax(nu, pi_init, beta, alpha, active, tau,
 
 
 @functools.lru_cache(maxsize=None)
-def _em_jit(max_iters: int):
-    """jit-compiled wrapper of :func:`em_update_jax`, cached per max_iters."""
+def _em_jit(max_iters: int, client_chunk: Optional[int] = None):
+    """jit-compiled wrapper of :func:`em_update_jax`, cached per config."""
     import jax
 
     def run(nu, pi0, beta, alpha, active, tau):
-        return em_update_jax(nu, pi0, beta, alpha, active, tau, max_iters)
+        return em_update_jax(nu, pi0, beta, alpha, active, tau, max_iters,
+                             client_chunk=client_chunk)
 
     return jax.jit(run)
 
 
 def em_map_jax(nu, pi_init, beta, alpha, tau: float = 1e-5,
-               max_iters: int = 10_000, active=None) -> Tuple:
+               max_iters: int = 10_000, active=None,
+               client_chunk: Optional[int] = None) -> Tuple:
     """JAX twin of :func:`em_map`. Returns (pi, iterations, converged).
 
     Shapes are static; the while loop carries (pi, iter, delta). The
-    compiled executable is cached per ``max_iters`` (shapes/dtypes handled
-    by jit's own cache), so repeated re-estimations — e.g. one per
-    ``RemoveComponent`` event across an LDS epoch — pay tracing cost once.
+    compiled executable is cached per ``(max_iters, client_chunk)``
+    (shapes/dtypes handled by jit's own cache), so repeated re-estimations
+    — e.g. one per ``RemoveComponent`` event across an LDS epoch — pay
+    tracing cost once.
     """
     import numpy as _np
 
     k = _np.shape(pi_init)[0]
     if active is None:
         active = _np.ones((k,), bool)
-    pi, iters, delta = _em_jit(int(max_iters))(
+    pi, iters, delta = _em_jit(
+        int(max_iters),
+        None if client_chunk is None else int(client_chunk))(
         nu, pi_init, beta, alpha, active, float(tau))
     return pi, iters, delta < tau

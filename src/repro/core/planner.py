@@ -56,8 +56,8 @@ from typing import Optional
 import numpy as np
 
 from repro.core import em as em_lib
-from repro.core.sampling import _num_steps
-from repro.core.types import ClientPopulation, EpochPlan
+from repro.core.sampling import _num_steps, resolve_plan_format
+from repro.core.types import (ClientPopulation, EpochPlan, SparseEpochPlan)
 
 _EPS = 1e-12
 
@@ -76,14 +76,51 @@ _PI_HISTORY_MAX_ENTRIES = 32_000_000
 # Compiled epoch planners
 # ---------------------------------------------------------------------------
 
+def _sparse_step_emit(jnp, c, seg):
+    """Compress a per-step (K,) count vector to padded (ids, cnts) of
+    length ``seg`` inside the traced scan.
+
+    ``jnp.nonzero(..., size=seg)`` returns indices in ascending order, so
+    the emitted segment enumerates the step's active clients in exactly the
+    order a dense row scan would — the property the batch iterator's
+    bit-identity relies on. Padding slots get id = -1, count = 0.
+    """
+    nnz = (c > 0).sum()
+    ids = jnp.nonzero(c, size=seg, fill_value=0)[0]
+    pos = jnp.arange(seg)
+    cnt = jnp.where(pos < nnz, c[ids], 0).astype(jnp.int32)
+    ids = jnp.where(pos < nnz, ids, -1).astype(jnp.int32)
+    return ids, cnt
+
+
+def _sparse_plan_from_padded(ids_h: np.ndarray,
+                             cnts_h: np.ndarray) -> tuple:
+    """Host-side (T, S) padded segments → flat CSR-style arrays."""
+    mask = cnts_h > 0
+    step_nnz = mask.sum(axis=1)
+    step_offsets = np.concatenate([np.zeros(1, np.int64),
+                                   np.cumsum(step_nnz, dtype=np.int64)])
+    # Row-major flatten keeps per-step ascending client-id order.
+    return step_offsets, ids_h[mask].astype(np.int32), \
+        cnts_h[mask].astype(np.int32)
+
+
 @functools.lru_cache(maxsize=None)
-def _ugs_device_fn(t_steps: int, b: int, k: int):
-    """Compiled UGS epoch planner for a static (T, B, K) configuration."""
+def _ugs_device_fn(t_steps: int, b: int, k: int, sparse: bool = False):
+    """Compiled UGS epoch planner for a static (T, B, K) configuration.
+
+    With ``sparse=True`` the scan emits per-step padded active-client
+    segments (S = min(B, K) slots of (client id, draw count)) instead of
+    the dense (K,) count row — O(T·B) output instead of O(T·K). The draw
+    process itself (RNG consumption, rejection, capping) is unchanged, so
+    sparse and dense plans for the same seed are bit-identical.
+    """
     import jax
     import jax.numpy as jnp
     from jax import lax
 
     chunk = max(b * _OVERDRAW_NUM // _OVERDRAW_DEN, b + 1)
+    seg = min(b, k)
 
     def plan_fn(sizes, key):
         sizes = sizes.astype(jnp.int32)
@@ -128,7 +165,9 @@ def _ugs_device_fn(t_steps: int, b: int, k: int):
 
             init = (budget, rem_in, rem_total, cdf, key_t)
             _, rem_out, rem_total, cdf, _ = lax.while_loop(cond, body, init)
-            return (rem_out, rem_total, cdf), rem_in - rem_out
+            counts = rem_in - rem_out
+            out = _sparse_step_emit(jnp, counts, seg) if sparse else counts
+            return (rem_out, rem_total, cdf), out
 
         cdf0 = fresh_cdf(sizes)
         keys = jax.random.split(key, t_steps)
@@ -141,7 +180,8 @@ def _ugs_device_fn(t_steps: int, b: int, k: int):
 
 @functools.lru_cache(maxsize=None)
 def _lds_device_fn(t_steps: int, b: int, k: int, reinit: bool,
-                   max_em_iters: int, record_pi: bool):
+                   max_em_iters: int, record_pi: bool,
+                   sparse: bool = False, em_client_chunk: int = 0):
     """Compiled LDS epoch planner for a static configuration.
 
     The scan carry is (remaining, active, π, cdf, em_total); EM
@@ -150,7 +190,10 @@ def _lds_device_fn(t_steps: int, b: int, k: int, reinit: bool,
     The float CDF over π is recomputed only when π changes (after EM).
     With ``record_pi`` the scan also emits the (T, K) per-step π matrix
     (diagnostics; skipped at large scale where it would rival the plan in
-    memory).
+    memory). ``sparse`` swaps the dense per-step count row for padded
+    active-client segments (see :func:`_ugs_device_fn`); ``em_client_chunk``
+    > 0 routes EM through the client-chunked update to bound its (K, M)
+    intermediates.
     """
     import jax
     import jax.numpy as jnp
@@ -162,9 +205,12 @@ def _lds_device_fn(t_steps: int, b: int, k: int, reinit: bool,
         pi = jnp.where(active, pi, 0.0)
         return pi / jnp.maximum(pi.sum(), _EPS)
 
+    seg = min(b, k)
+
     def run_em(pi, active, nu, beta, alpha, tau):
         pi_new, iters, _ = em_lib.em_update_jax(
-            nu, pi, beta, alpha, active, tau, max_em_iters)
+            nu, pi, beta, alpha, active, tau, max_em_iters,
+            client_chunk=em_client_chunk or None)
         return pi_new, iters
 
     def plan_fn(sizes, nu, beta, alpha, tau, key):
@@ -219,8 +265,9 @@ def _lds_device_fn(t_steps: int, b: int, k: int, reinit: bool,
                     em_total, key_t)
             _, counts, active, pi, cdf, em_total, _ = lax.while_loop(
                 cond, body, init)
+            out = _sparse_step_emit(jnp, counts, seg) if sparse else counts
             return ((remaining - counts, active, pi, cdf, em_total),
-                    (counts, pi) if record_pi else counts)
+                    (out, pi) if record_pi else out)
 
         keys = jax.random.split(key, t_steps)
         carry0 = (sizes, active0, pi0, jnp.cumsum(pi0), em0)
@@ -243,11 +290,14 @@ def _prng_key(seed: int):
 
 
 def ugs_plan_jax(pop: ClientPopulation, global_batch_size: int,
-                 seed: int = 0) -> EpochPlan:
+                 seed: int = 0, plan_format: str = "dense"):
     """Uniform Global Sampling (Algorithm 1), jit-compiled epoch planning.
 
     Drop-in distributional equivalent of
     :func:`repro.core.sampling.ugs_plan`; one device call per epoch.
+    ``plan_format="sparse"`` keeps device output and host plan at O(T·B):
+    the scan emits per-step active-client segments instead of dense (K,)
+    rows, with draws (and hence batches) bit-identical to the dense path.
     """
     import jax
     import jax.numpy as jnp
@@ -257,9 +307,19 @@ def ugs_plan_jax(pop: ClientPopulation, global_batch_size: int,
     if total >= np.iinfo(np.int32).max:
         raise ValueError("jax planner requires total dataset size < 2^31")
     t_steps = _num_steps(total, b)
-    fn = _ugs_device_fn(t_steps, b, pop.num_clients)
-    plan = fn(jnp.asarray(pop.dataset_sizes, jnp.int32), _prng_key(seed))
-    return EpochPlan(local_batch_sizes=np.asarray(jax.device_get(plan)),
+    fmt = resolve_plan_format(plan_format, t_steps, pop.num_clients)
+    fn = _ugs_device_fn(t_steps, b, pop.num_clients,
+                        sparse=(fmt == "sparse"))
+    out = fn(jnp.asarray(pop.dataset_sizes, jnp.int32), _prng_key(seed))
+    if fmt == "sparse":
+        ids_h = np.asarray(jax.device_get(out[0]))
+        cnts_h = np.asarray(jax.device_get(out[1]))
+        offsets, ids, cnts = _sparse_plan_from_padded(ids_h, cnts_h)
+        return SparseEpochPlan(step_offsets=offsets, client_ids=ids,
+                               draw_counts=cnts,
+                               num_clients=pop.num_clients,
+                               global_batch_size=b, method="ugs")
+    return EpochPlan(local_batch_sizes=np.asarray(jax.device_get(out)),
                      global_batch_size=b, method="ugs")
 
 
@@ -268,7 +328,9 @@ def lds_plan_jax(pop: ClientPopulation, global_batch_size: int,
                  reinit: bool = False, seed: int = 0,
                  sample_size: Optional[int] = None,
                  max_em_iters: int = 10_000,
-                 record_pi_history: Optional[bool] = None) -> EpochPlan:
+                 record_pi_history: Optional[bool] = None,
+                 plan_format: str = "dense",
+                 em_client_chunk: Optional[int] = None):
     """Latent Dirichlet Sampling (Algorithm 3), jit-compiled epoch planning.
 
     Drop-in distributional equivalent of
@@ -280,6 +342,10 @@ def lds_plan_jax(pop: ClientPopulation, global_batch_size: int,
     skips the per-step history when the (T, K) matrix would exceed
     ``_PI_HISTORY_MAX_ENTRIES`` — at that scale it rivals the plan itself
     in memory — leaving only the initial π.
+
+    ``plan_format="sparse"`` emits per-step active-client segments (see
+    :func:`ugs_plan_jax`); ``em_client_chunk`` bounds EM's (K, M)
+    intermediates by processing clients in chunks of that size.
     """
     import jax
     import jax.numpy as jnp
@@ -290,6 +356,7 @@ def lds_plan_jax(pop: ClientPopulation, global_batch_size: int,
     if pop.total_size >= np.iinfo(np.int32).max:
         raise ValueError("jax planner requires total dataset size < 2^31")
     t_steps = _num_steps(pop.total_size, b)
+    fmt = resolve_plan_format(plan_format, t_steps, pop.num_clients)
     if record_pi_history is None:
         record_pi_history = (t_steps * pop.num_clients
                              <= _PI_HISTORY_MAX_ENTRIES)
@@ -301,7 +368,9 @@ def lds_plan_jax(pop: ClientPopulation, global_batch_size: int,
                                                   sample_size=sample_size)
 
     fn = _lds_device_fn(t_steps, b, pop.num_clients, bool(reinit),
-                        int(max_em_iters), bool(record_pi_history))
+                        int(max_em_iters), bool(record_pi_history),
+                        sparse=(fmt == "sparse"),
+                        em_client_chunk=int(em_client_chunk or 0))
     plan, pi_steps, pi0, em_total = fn(
         jnp.asarray(pop.dataset_sizes, jnp.int32),
         jnp.asarray(nu, jnp.float32),
@@ -312,9 +381,20 @@ def lds_plan_jax(pop: ClientPopulation, global_batch_size: int,
     pi_hist = [np.asarray(pi0, np.float64)]
     if pi_steps is not None:
         pi_hist += list(np.asarray(jax.device_get(pi_steps), np.float64))
+    method = f"lds(delta={delta},R={int(reinit)})"
+    if fmt == "sparse":
+        ids_h = np.asarray(jax.device_get(plan[0]))
+        cnts_h = np.asarray(jax.device_get(plan[1]))
+        offsets, ids, cnts = _sparse_plan_from_padded(ids_h, cnts_h)
+        return SparseEpochPlan(step_offsets=offsets, client_ids=ids,
+                               draw_counts=cnts,
+                               num_clients=pop.num_clients,
+                               global_batch_size=b, method=method,
+                               em_iterations=int(em_total),
+                               pi_history=pi_hist)
     return EpochPlan(local_batch_sizes=np.asarray(jax.device_get(plan)),
                      global_batch_size=b,
-                     method=f"lds(delta={delta},R={int(reinit)})",
+                     method=method,
                      em_iterations=int(em_total), pi_history=pi_hist)
 
 

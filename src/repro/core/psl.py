@@ -54,6 +54,34 @@ def slot_weights(client_ids: np.ndarray, local_batch_sizes: np.ndarray,
     return w.astype(np.float32)
 
 
+def slot_weights_segments(client_ids: np.ndarray, slot_counts: np.ndarray,
+                          dataset_sizes: np.ndarray,
+                          aggregation: str = "global_mean") -> np.ndarray:
+    """Segment-streamed twin of :func:`slot_weights`.
+
+    Takes the owning client's B_k^t *per slot* (``slot_counts``, e.g.
+    ``np.repeat(counts, counts)`` from a sparse plan segment) instead of the
+    dense (K,) row, so computing weights never materializes O(K) per-step
+    state. Arithmetic is slot-for-slot identical to the dense form —
+    d[k]/D / B_k^t · B in the same operation order — hence bit-identical
+    weights.
+
+    client_ids: (B,) source client of each slot (-1 = padding).
+    slot_counts: (B,) B_k^t of each slot's owner (any value ≥ 1 on padding).
+    """
+    valid = client_ids >= 0
+    if aggregation == "global_mean":
+        return valid.astype(np.float32)
+    if aggregation != "client_weighted":
+        raise ValueError(aggregation)
+    d = dataset_sizes.astype(np.float64)
+    total = d.sum()
+    bk = np.maximum(slot_counts, 1)
+    b = max(int(valid.sum()), 1)
+    w = np.where(valid, d[np.maximum(client_ids, 0)] / total / bk * b, 0.0)
+    return w.astype(np.float32)
+
+
 def _grad_norm(grads):
     return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
                         for g in jax.tree_util.tree_leaves(grads)))

@@ -36,7 +36,8 @@ import numpy as np
 
 from repro.core import em as em_lib
 from repro.core import straggler as straggler_lib
-from repro.core.types import ClientPopulation, EpochPlan
+from repro.core.types import (ClientPopulation, EpochPlan, SparseEpochPlan,
+                              SparsePlanBuilder)
 
 _EPS = 1e-12
 
@@ -45,25 +46,63 @@ def _num_steps(total: int, batch: int) -> int:
     return int(np.ceil(total / batch))
 
 
+# ``plan_format="auto"`` stores the plan sparsely once the dense (T, K)
+# matrix would exceed this many entries (128 MiB of int64 rows) — at that
+# point the matrix itself, not the drawing, is the planning wall.
+AUTO_SPARSE_MIN_DENSE_ENTRIES = 2 ** 24
+
+
+def resolve_plan_format(plan_format: str, t_steps: int,
+                        num_clients: int) -> str:
+    """Map "dense" | "sparse" | "auto" to a concrete plan representation.
+
+    The format never changes the draws: a sparse plan is the segment
+    compression of the dense plan the same seed would produce
+    (tests/test_plan_properties.py pins this bit-identically per backend).
+    """
+    plan_format = plan_format.lower()
+    if plan_format == "auto":
+        if t_steps * num_clients > AUTO_SPARSE_MIN_DENSE_ENTRIES:
+            return "sparse"
+        return "dense"
+    if plan_format not in ("dense", "sparse"):
+        raise ValueError(f"unknown plan format: {plan_format!r}")
+    return plan_format
+
+
 # ---------------------------------------------------------------------------
 # Fixed baselines
 # ---------------------------------------------------------------------------
 
 def _fixed_plan(pop: ClientPopulation, per_client: np.ndarray,
-                method: str, global_batch_size: int) -> EpochPlan:
+                method: str, global_batch_size: int,
+                plan_format: str = "dense"):
     """Roll a fixed per-step allocation until all datasets deplete."""
-    remaining = pop.dataset_sizes.copy()
-    rows = []
+    sizes = pop.dataset_sizes
+    # a fixed roll's length is exact up front: client k depletes at step
+    # ceil(D_k / B_k'); "auto" resolves against it without rolling twice
+    alive = (sizes > 0) & (per_client > 0)
+    t_est = int(np.max(np.ceil(sizes[alive] / per_client[alive]))) \
+        if alive.any() else 0
+    fmt = resolve_plan_format(plan_format, t_est, pop.num_clients)
+    remaining = sizes.copy()
+    rows = SparsePlanBuilder(pop.num_clients) if fmt == "sparse" else []
     while remaining.sum() > 0:
         take = np.minimum(per_client, remaining)
-        rows.append(take)
+        if fmt == "sparse":
+            rows.add_step_counts(take)
+        else:
+            rows.append(take)
         remaining = remaining - take
+    if fmt == "sparse":
+        return rows.build(global_batch_size=global_batch_size, method=method)
     plan = np.stack(rows).astype(np.int64)
     return EpochPlan(local_batch_sizes=plan,
                      global_batch_size=global_batch_size, method=method)
 
 
-def fls_plan(pop: ClientPopulation, global_batch_size: int) -> EpochPlan:
+def fls_plan(pop: ClientPopulation, global_batch_size: int,
+             plan_format: str = "dense"):
     """Fixed Local Sampling: identical local batch size for every client.
 
     B' = round(B / K), floored at 1 (paper Sec. V-A rounding rule). The
@@ -73,15 +112,18 @@ def fls_plan(pop: ClientPopulation, global_batch_size: int) -> EpochPlan:
     k = pop.num_clients
     per = max(1, int(round(global_batch_size / k)))
     per_client = np.full(k, per, dtype=np.int64)
-    return _fixed_plan(pop, per_client, "fls", global_batch_size)
+    return _fixed_plan(pop, per_client, "fls", global_batch_size,
+                       plan_format=plan_format)
 
 
-def fpls_plan(pop: ClientPopulation, global_batch_size: int) -> EpochPlan:
+def fpls_plan(pop: ClientPopulation, global_batch_size: int,
+              plan_format: str = "dense"):
     """Fixed Proportional Local Sampling: B_k = round(B * D_k / D), min 1."""
     d = pop.dataset_sizes.astype(np.float64)
     raw = global_batch_size * d / max(d.sum(), 1.0)
     per_client = np.maximum(1, np.round(raw)).astype(np.int64)
-    return _fixed_plan(pop, per_client, "fpls", global_batch_size)
+    return _fixed_plan(pop, per_client, "fpls", global_batch_size,
+                       plan_format=plan_format)
 
 
 # ---------------------------------------------------------------------------
@@ -119,7 +161,8 @@ def _draw_step_counts(rng: np.random.Generator, budget: int,
 def ugs_plan(pop: ClientPopulation, global_batch_size: int,
              seed: int = 0,
              sequential: bool = False,
-             backend: str = "numpy") -> EpochPlan:
+             backend: str = "numpy",
+             plan_format: str = "dense"):
     """Uniform Global Sampling (Algorithm 1).
 
     π_k = D_k / D; each of T=⌈D/B⌉ steps assigns B slots to clients via
@@ -131,6 +174,11 @@ def ugs_plan(pop: ClientPopulation, global_batch_size: int,
     :mod:`repro.core.planner` (same count distribution, different PRNG);
     ``"auto"`` picks it for large K. ``sequential=True`` forces the literal
     per-draw NumPy reference and is incompatible with the jax backend.
+
+    ``plan_format`` selects the plan representation: "dense" (the (T, K)
+    matrix), "sparse" (per-step active-client segments,
+    :class:`SparseEpochPlan`), or "auto". The format never changes the
+    draws — same seed, same backend ⇒ same per-step batches either way.
     """
     from repro.core import planner as planner_lib
     if sequential and backend.lower() == "auto":
@@ -138,13 +186,16 @@ def ugs_plan(pop: ClientPopulation, global_batch_size: int,
     if planner_lib.resolve_backend(backend, pop.num_clients) == "jax":
         if sequential:
             raise ValueError("sequential reference draws are numpy-only")
-        return planner_lib.ugs_plan_jax(pop, global_batch_size, seed=seed)
+        return planner_lib.ugs_plan_jax(pop, global_batch_size, seed=seed,
+                                        plan_format=plan_format)
     rng = np.random.default_rng(seed)
     d = pop.dataset_sizes.astype(np.float64)
     total = int(d.sum())
     b = int(global_batch_size)
     t_steps = _num_steps(total, b)
-    plan = np.zeros((t_steps, pop.num_clients), dtype=np.int64)
+    fmt = resolve_plan_format(plan_format, t_steps, pop.num_clients)
+    plan = SparsePlanBuilder(pop.num_clients) if fmt == "sparse" else \
+        np.zeros((t_steps, pop.num_clients), dtype=np.int64)
 
     remaining = pop.dataset_sizes.copy()
     pi = d / max(d.sum(), _EPS)
@@ -155,8 +206,13 @@ def ugs_plan(pop: ClientPopulation, global_batch_size: int,
                                                       remaining)
         else:
             counts, pi = _draw_step_counts(rng, budget, pi, remaining)
-        plan[t] = counts
+        if fmt == "sparse":
+            plan.add_step_counts(counts)
+        else:
+            plan[t] = counts
         remaining -= counts
+    if fmt == "sparse":
+        return plan.build(global_batch_size=b, method="ugs")
     return EpochPlan(local_batch_sizes=plan, global_batch_size=b,
                      method="ugs")
 
@@ -205,7 +261,9 @@ def lds_plan(pop: ClientPopulation, global_batch_size: int,
              sample_size: Optional[int] = None,
              max_em_iters: int = 10_000,
              backend: str = "numpy",
-             record_pi_history: Optional[bool] = None) -> EpochPlan:
+             record_pi_history: Optional[bool] = None,
+             plan_format: str = "dense",
+             em_client_chunk: Optional[int] = None):
     """Latent Dirichlet Sampling (Algorithm 3).
 
     π is the MAP estimate of the mixture proportions under a Dir(α) prior,
@@ -222,13 +280,19 @@ def lds_plan(pop: ClientPopulation, global_batch_size: int,
     large K. ``record_pi_history`` only affects the jax backend (see
     :func:`repro.core.planner.lds_plan_jax`); the NumPy path's history is
     per-re-estimation and always recorded.
+
+    ``plan_format`` selects "dense" | "sparse" | "auto" plan storage (the
+    draws are format-independent); ``em_client_chunk`` bounds MAP-EM's
+    (K, M) intermediates by processing clients in chunks (same fixed point
+    as the unchunked solve — see :func:`repro.core.em.em_map`).
     """
     from repro.core import planner as planner_lib
     if planner_lib.resolve_backend(backend, pop.num_clients) == "jax":
         return planner_lib.lds_plan_jax(
             pop, global_batch_size, delta=delta, tau=tau, reinit=reinit,
             seed=seed, sample_size=sample_size, max_em_iters=max_em_iters,
-            record_pi_history=record_pi_history)
+            record_pi_history=record_pi_history, plan_format=plan_format,
+            em_client_chunk=em_client_chunk)
     rng = np.random.default_rng(seed)
     k = pop.num_clients
     b = int(global_batch_size)
@@ -251,13 +315,16 @@ def lds_plan(pop: ClientPopulation, global_batch_size: int,
     em_total = 0
     pi = _draw_prior(active)
     res = em_lib.em_map(nu, pi, beta, alpha, tau=tau, max_iters=max_em_iters,
-                        active=active)
+                        active=active, client_chunk=em_client_chunk)
     pi = res.pi
     em_total += res.iterations
     pi_history = [pi.copy()]
 
-    plan = np.zeros((t_steps, k), dtype=np.int64)
+    fmt = resolve_plan_format(plan_format, t_steps, k)
+    plan = SparsePlanBuilder(k) if fmt == "sparse" else \
+        np.zeros((t_steps, k), dtype=np.int64)
     remaining = pop.dataset_sizes.copy()
+    method_name = f"lds(delta={delta},R={int(reinit)})"
     for t in range(t_steps):
         budget = min(b, int(remaining.sum()))
         counts = np.zeros(k, dtype=np.int64)
@@ -279,14 +346,21 @@ def lds_plan(pop: ClientPopulation, global_batch_size: int,
                     pi = np.where(active, pi, 0.0)
                     pi = pi / max(pi.sum(), _EPS)
                 res = em_lib.em_map(nu, pi, beta, alpha, tau=tau,
-                                    max_iters=max_em_iters, active=active)
+                                    max_iters=max_em_iters, active=active,
+                                    client_chunk=em_client_chunk)
                 pi = res.pi
                 em_total += res.iterations
                 pi_history.append(pi.copy())
-        plan[t] = counts
+        if fmt == "sparse":
+            plan.add_step_counts(counts)
+        else:
+            plan[t] = counts
         remaining -= counts
+    if fmt == "sparse":
+        return plan.build(global_batch_size=b, method=method_name,
+                          em_iterations=em_total, pi_history=pi_history)
     return EpochPlan(local_batch_sizes=plan, global_batch_size=b,
-                     method=f"lds(delta={delta},R={int(reinit)})",
+                     method=method_name,
                      em_iterations=em_total, pi_history=pi_history)
 
 
@@ -295,7 +369,8 @@ def lds_plan(pop: ClientPopulation, global_batch_size: int,
 # ---------------------------------------------------------------------------
 
 def make_plan(method: str, pop: ClientPopulation, global_batch_size: int,
-              seed: int = 0, backend: str = "numpy", **kwargs) -> EpochPlan:
+              seed: int = 0, backend: str = "numpy",
+              plan_format: str = "dense", **kwargs):
     """Uniform entry point used by the data pipeline / trainer.
 
     ``backend`` selects the planner engine for the stochastic samplers:
@@ -303,15 +378,24 @@ def make_plan(method: str, pop: ClientPopulation, global_batch_size: int,
     engine — one device call per epoch), or "auto" (jax for K ≥
     ``planner.AUTO_BACKEND_MIN_CLIENTS``). The fixed baselines are
     deterministic rolls and always run on the host.
+
+    ``plan_format`` selects the plan representation: "dense" — the (T, K)
+    :class:`EpochPlan` matrix; "sparse" — per-step active-client segments
+    (:class:`SparseEpochPlan`, O(T·B) memory since each global batch
+    touches at most B of K clients); "auto" — sparse once T·K exceeds
+    ``AUTO_SPARSE_MIN_DENSE_ENTRIES``. The format is pure storage: for a
+    given (method, backend, seed) the per-step batches are bit-identical
+    across formats.
     """
     method = method.lower()
     if method == "ugs":
-        return ugs_plan(pop, global_batch_size, seed=seed, backend=backend)
+        return ugs_plan(pop, global_batch_size, seed=seed, backend=backend,
+                        plan_format=plan_format)
     if method == "lds":
         return lds_plan(pop, global_batch_size, seed=seed, backend=backend,
-                        **kwargs)
+                        plan_format=plan_format, **kwargs)
     if method == "fpls":
-        return fpls_plan(pop, global_batch_size)
+        return fpls_plan(pop, global_batch_size, plan_format=plan_format)
     if method == "fls":
-        return fls_plan(pop, global_batch_size)
+        return fls_plan(pop, global_batch_size, plan_format=plan_format)
     raise ValueError(f"unknown sampling method: {method!r}")

@@ -23,7 +23,7 @@ from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
-from repro.core.psl import slot_weights
+from repro.core.psl import slot_weights_segments
 from repro.core.types import ClientPopulation, EpochPlan
 
 
@@ -52,9 +52,29 @@ class ClientStore:
         object.__setattr__(store, "_flat_cache", (flat_f, flat_l, base))
         return store
 
+    @classmethod
+    def from_flat(cls, flat_features: np.ndarray, flat_labels: np.ndarray,
+                  base: np.ndarray, population: ClientPopulation
+                  ) -> "ClientStore":
+        """Build a store directly from client-major flat arrays.
+
+        The million-client path: a list of K per-client views costs O(K)
+        Python objects (≈ GBs at K = 1e6), but the vectorized iterator only
+        ever reads ``flat_arrays()`` — so this constructor skips the view
+        list entirely. ``base[k]`` is client k's start offset into the flat
+        arrays.
+        """
+        store = cls(features=[], labels=[], population=population)
+        base = np.asarray(base, dtype=np.int64)
+        object.__setattr__(store, "_flat_cache",
+                           (flat_features, flat_labels, base))
+        object.__setattr__(store, "_num_clients_flat", int(base.shape[0]))
+        return store
+
     @property
     def num_clients(self) -> int:
-        return len(self.features)
+        n = getattr(self, "_num_clients_flat", None)
+        return len(self.features) if n is None else n
 
     def flat_arrays(self):
         """(flat_features, flat_labels, base) — shards concatenated
@@ -114,7 +134,10 @@ class GlobalBatchIterator:
 
     Equivalent to asking client k for its next B_k^t locally-shuffled
     samples at each step; implemented as vectorized gathers against a flat
-    permuted copy of the shards.
+    permuted copy of the shards. Accepts a dense :class:`EpochPlan` or a
+    :class:`repro.core.types.SparseEpochPlan` interchangeably — batch
+    assembly streams per-step ``step_segments`` either way, and for a given
+    (plan, seed) the emitted batches are bit-identical across formats.
 
     ``num_shards`` opts into the mesh-parallel slot layout: each batch's
     rows are stably reordered by the contributing client's home data shard
@@ -164,17 +187,25 @@ class GlobalBatchIterator:
         self._consumed = True
         cursor = np.zeros(self.store.num_clients, dtype=np.int64)
         for t in range(self.plan.num_steps):
-            sizes = np.asarray(self.plan.local_batch_sizes[t], dtype=np.int64)
-            idx = self._perm[np.repeat(self._base + cursor, sizes)
-                             + _run_offsets(sizes)]
-            cursor = cursor + sizes
-            cids = np.repeat(self._client_ids, sizes)
+            # Stream the step's active-client segment (ids ascending, so a
+            # dense plan's repeat-over-all-K order is reproduced exactly).
+            # Per-step work is O(B), independent of K — with a sparse plan
+            # no (K,) row is ever materialized.
+            ids, cnts = self.plan.step_segments(t)
+            ids = np.asarray(ids, dtype=np.int64)
+            cnts = np.asarray(cnts, dtype=np.int64)
+            idx = self._perm[np.repeat(self._base[ids] + cursor[ids], cnts)
+                             + _run_offsets(cnts)]
+            cursor[ids] += cnts
+            cids = np.repeat(ids, cnts)
+            slot_cnts = np.repeat(cnts, cnts)   # owner's B_k^t per slot
             if self._shard_of_client is not None and len(cids):
                 # group the step's slots by home shard (stable: preserves
                 # the per-client draw order within each shard segment)
                 order = np.argsort(self._shard_of_client[cids],
                                    kind="stable")
-                idx, cids = idx[order], cids[order]
+                idx, cids, slot_cnts = idx[order], cids[order], \
+                    slot_cnts[order]
             feats = self._flat_features[idx]
             labs = self._flat_labels[idx]
             b = self.pad_to
@@ -185,9 +216,11 @@ class GlobalBatchIterator:
                                      feats.dtype)])
                 labs = np.concatenate([labs, np.zeros(pad, labs.dtype)])
                 cids = np.concatenate([cids, np.full(pad, -1)])
-            w = slot_weights(cids, sizes,
-                             self.store.population.dataset_sizes,
-                             self.aggregation)
+                slot_cnts = np.concatenate([slot_cnts,
+                                            np.ones(pad, np.int64)])
+            w = slot_weights_segments(cids, slot_cnts,
+                                      self.store.population.dataset_sizes,
+                                      self.aggregation)
             out = {"features": feats, "labels": labs.astype(np.int64),
                    "client_ids": cids, "weights": w, "step": t}
             if self._shard_of_client is not None:

@@ -53,6 +53,7 @@ def _shim_spec(protocol: str, *, epochs: int, batch_size: int = 64,
                aggregation: str = "global_mean",
                sampler_kwargs: Optional[dict] = None,
                planner_backend: str = "numpy",
+               plan_format: str = "dense",
                local_epochs: Optional[int] = None,
                track_tpe: bool = False, base_step_ms: float = 60.0,
                engine: str = "fused", sharding: str = "tp",
@@ -68,6 +69,7 @@ def _shim_spec(protocol: str, *, epochs: int, batch_size: int = 64,
                               track_tpe=track_tpe,
                               base_step_ms=base_step_ms),
         sampler=SamplerSpec(method=method, backend=planner_backend,
+                            plan_format=plan_format,
                             kwargs=dict(sampler_kwargs or {})),
         execution=ExecutionSpec(engine=engine, sharding=sharding,
                                 lowering=lowering,
@@ -97,17 +99,21 @@ def train_psl(model, optimizer, store: ClientStore, test, *, epochs: int,
               aggregation: str = "global_mean", seed: int = 0,
               sampler_kwargs: Optional[dict] = None,
               planner_backend: str = "numpy",
+              plan_format: str = "dense",
               track_tpe: bool = False, base_step_ms: float = 60.0
               ) -> History:
     """PSL training loop (shim). ``planner_backend`` selects the epoch-plan
     engine: "numpy" (default — the exact reference, seed-for-seed
     reproducible against published runs), "jax" (vectorized engine,
-    different PRNG), or "auto" (jax for large K)."""
+    different PRNG), or "auto" (jax for large K). ``plan_format`` selects
+    dense / sparse / auto epoch-plan storage (sparse is the million-client
+    path; batches are bit-identical across formats)."""
     spec = _shim_spec("psl", epochs=epochs,
                       global_batch_size=global_batch_size, method=method,
                       aggregation=aggregation,
                       sampler_kwargs=sampler_kwargs,
-                      planner_backend=planner_backend, track_tpe=track_tpe,
+                      planner_backend=planner_backend,
+                      plan_format=plan_format, track_tpe=track_tpe,
                       base_step_ms=base_step_ms)
     data = DataBundle.from_store(store, test=test)
     cbs = [events_lib.PlanStatsCallback(),
@@ -123,6 +129,7 @@ def train_psl_sharded(model, optimizer, store: ClientStore, test, *,
                       aggregation: str = "global_mean", seed: int = 0,
                       sampler_kwargs: Optional[dict] = None,
                       planner_backend: str = "numpy",
+                      plan_format: str = "dense",
                       mesh=None, profile: str = "tp",
                       lowering: str = "gspmd", microbatches: int = 1,
                       track_tpe: bool = False, base_step_ms: float = 60.0
@@ -138,7 +145,8 @@ def train_psl_sharded(model, optimizer, store: ClientStore, test, *,
                       global_batch_size=global_batch_size, method=method,
                       aggregation=aggregation,
                       sampler_kwargs=sampler_kwargs,
-                      planner_backend=planner_backend, track_tpe=track_tpe,
+                      planner_backend=planner_backend,
+                      plan_format=plan_format, track_tpe=track_tpe,
                       base_step_ms=base_step_ms, engine="sharded",
                       sharding=profile, lowering=lowering,
                       microbatches=microbatches)

@@ -120,6 +120,7 @@ def _legacy_overrides(args) -> List[str]:
     add("data.sequences", args.sequences)
     add("sampler.method", args.method)
     add("sampler.backend", args.planner_backend)
+    add("sampler.plan_format", args.plan_format)
     add("protocol.aggregation", args.aggregation)
     add("execution.mesh", args.mesh)
     add("execution.sharding", args.sharding)
@@ -166,6 +167,10 @@ def main(argv=None):
                     help="epoch-plan engine: numpy reference (default; "
                          "seed-for-seed reproducible), vectorized jax, or "
                          "auto (jax for large client counts)")
+    ap.add_argument("--plan-format", default=None, dest="plan_format",
+                    choices=["dense", "sparse", "auto"],
+                    help="epoch-plan storage: dense (T, K) matrix, sparse "
+                         "per-step segments (million-client path), or auto")
     ap.add_argument("--aggregation", default=None)
     ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
                     help="(data × model) mesh for the sharded engine, e.g. "

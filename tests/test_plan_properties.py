@@ -1,0 +1,310 @@
+"""Property-based plan invariants and dense↔sparse format equivalence.
+
+The sparse epoch plan (per-step active-client segments) is pure storage:
+for a given (method, backend, seed) it must describe *exactly* the same
+draws as the dense (T, K) matrix. This suite proves it three ways:
+
+  * randomized invariants (hypothesis, optional): every plan — dense and
+    sparse, any method — has fixed global batch size per step, never draws
+    beyond a client's remaining pool (without replacement), and depletes
+    the pooled total exactly;
+  * bit-identity — dense and sparse plans for the same seed are equal
+    entry-for-entry on both backends (the acceptance criterion, checked
+    deterministically up to K = 4096), and the batch iterator emits
+    bit-identical batches for both formats;
+  * scale — a K = 1_000_000 sparse plan builds with memory scaling in T·B
+    (not T·K) and streams batches (slow-marked).
+
+Cross-backend note: numpy (PCG64) and jax (rbg) use different PRNGs by
+documented design (see repro.core.planner), so plans for the same seed are
+*distributionally* — not draw-wise — equal across backends. Cross-backend
+checks therefore assert the draw-independent aggregates (step sums, client
+totals), while dense↔sparse checks assert full bit-identity per backend.
+"""
+import numpy as np
+import pytest
+
+from optional_deps import given, settings, st
+
+from repro.core import (ClientPopulation, EpochPlan, SparseEpochPlan,
+                        make_plan, resolve_plan_format)
+from repro.core.sampling import (AUTO_SPARSE_MIN_DENSE_ENTRIES, lds_plan,
+                                 ugs_plan)
+from repro.data.federated import ClientStore, GlobalBatchIterator
+
+
+def _noniid_pop(k, m=6, seed=0, lo=3, hi=50):
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(lo, hi, size=k)
+    counts = np.zeros((k, m), np.int64)
+    for i in range(k):
+        cls = rng.choice(m, 2, replace=False)
+        s = rng.integers(0, sizes[i] + 1)
+        counts[i, cls[0]] = s
+        counts[i, cls[1]] = sizes[i] - s
+    return ClientPopulation(sizes, counts, np.zeros(k))
+
+
+def _check_plan_invariants(plan, pop, b):
+    """Fixed global batch, without-replacement, full depletion — streamed
+    from per-step segments so the same checker covers both formats."""
+    assert plan.num_clients == pop.num_clients
+    taken = np.zeros(pop.num_clients, np.int64)
+    sums = plan.step_sums()
+    for t in range(plan.num_steps):
+        ids, cnts = plan.step_segments(t)
+        assert np.all(np.asarray(cnts) > 0) or len(cnts) == 0
+        taken[np.asarray(ids, np.int64)] += np.asarray(cnts, np.int64)
+        # without replacement: cumulative draws never exceed the local pool
+        assert np.all(taken <= pop.dataset_sizes)
+    if plan.method in ("ugs",) or plan.method.startswith("lds"):
+        assert np.all(sums[:-1] == b)
+        assert 0 < sums[-1] <= b
+    # full-epoch depletion sums to the pooled total, client by client
+    assert np.array_equal(taken, pop.dataset_sizes)
+    assert np.array_equal(plan.client_totals(), pop.dataset_sizes)
+
+
+def _assert_plans_equal(dense, sparse):
+    assert isinstance(dense, EpochPlan)
+    assert isinstance(sparse, SparseEpochPlan)
+    assert sparse.num_steps == dense.num_steps
+    assert np.array_equal(sparse.local_batch_sizes, dense.local_batch_sizes)
+
+
+# ------------------------------------------------------- randomized (property)
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(2, 40), b=st.integers(4, 64),
+       method=st.sampled_from(["ugs", "lds", "fls", "fpls"]),
+       seed=st.integers(0, 2 ** 16))
+def test_property_plan_invariants_and_format_identity(k, b, method, seed):
+    """Any numpy plan: invariants hold and sparse ≡ dense bit-for-bit."""
+    pop = _noniid_pop(k, seed=seed % 97)
+    kwargs = {"seed": seed} if method in ("ugs", "lds") else {}
+    dense = make_plan(method, pop, b, plan_format="dense", **kwargs)
+    sparse = make_plan(method, pop, b, plan_format="sparse", **kwargs)
+    _assert_plans_equal(dense, sparse)
+    _check_plan_invariants(sparse, pop, b)
+    if method in ("ugs", "lds"):
+        _check_plan_invariants(dense, pop, b)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), draw_seed=st.integers(0, 2 ** 16))
+def test_property_jax_dense_sparse_bit_identity(seed, draw_seed):
+    """jax backend: sparse ≡ dense for randomized pools and seeds.
+
+    The pooled total is pinned so every example reuses one compiled
+    (T, B, K) executable — the randomness explores pools and draws, not
+    compile configurations.
+    """
+    pytest.importorskip("jax")
+    k, b, total = 64, 32, 1024
+    rng = np.random.default_rng(seed)
+    sizes = rng.multinomial(total - k, np.full(k, 1.0 / k)) + 1  # ≥1 each
+    counts = np.zeros((k, 4), np.int64)
+    counts[np.arange(k), rng.integers(0, 4, k)] = sizes
+    pop = ClientPopulation(sizes, counts, np.zeros(k))
+    dense = ugs_plan(pop, b, seed=draw_seed, backend="jax")
+    sparse = ugs_plan(pop, b, seed=draw_seed, backend="jax",
+                      plan_format="sparse")
+    _assert_plans_equal(dense, sparse)
+    _check_plan_invariants(sparse, pop, b)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_property_backend_aggregate_equivalence(seed):
+    """numpy and jax plans for one seed agree on every draw-independent
+    aggregate (different PRNGs → draw-wise equality is not expected)."""
+    pytest.importorskip("jax")
+    k, b, total = 48, 24, 768
+    rng = np.random.default_rng(seed)
+    sizes = rng.multinomial(total - k, np.full(k, 1.0 / k)) + 1
+    counts = np.zeros((k, 4), np.int64)
+    counts[np.arange(k), rng.integers(0, 4, k)] = sizes
+    pop = ClientPopulation(sizes, counts, np.zeros(k))
+    p_np = ugs_plan(pop, b, seed=seed, plan_format="sparse")
+    p_j = ugs_plan(pop, b, seed=seed, backend="jax", plan_format="sparse")
+    assert p_np.num_steps == p_j.num_steps
+    assert np.array_equal(p_np.step_sums(), p_j.step_sums())
+    assert np.array_equal(p_np.client_totals(), p_j.client_totals())
+
+
+# ------------------------------------------------- deterministic bit-identity
+
+@pytest.mark.parametrize("backend,k,b", [("numpy", 4096, 128),
+                                         ("jax", 4096, 128)])
+def test_ugs_dense_sparse_bit_identity_k4096(backend, k, b):
+    """Acceptance: sparse ≡ dense at K = 4096 on both backends (UGS)."""
+    if backend == "jax":
+        pytest.importorskip("jax")
+    pop = _noniid_pop(k, seed=5, lo=2, hi=6)
+    dense = ugs_plan(pop, b, seed=9, backend=backend)
+    sparse = ugs_plan(pop, b, seed=9, backend=backend, plan_format="sparse")
+    _assert_plans_equal(dense, sparse)
+    _check_plan_invariants(sparse, pop, b)
+
+
+@pytest.mark.parametrize("backend,k", [("numpy", 512), ("jax", 4096)])
+def test_lds_dense_sparse_bit_identity(backend, k):
+    """Acceptance: sparse ≡ dense for LDS (numpy EM is host-bound, so the
+    reference runs at K = 512; the jax engine covers K = 4096)."""
+    if backend == "jax":
+        pytest.importorskip("jax")
+    pop = _noniid_pop(k, seed=7, lo=2, hi=6)
+    b = 128
+    dense = lds_plan(pop, b, delta=1.0, seed=4, backend=backend)
+    sparse = lds_plan(pop, b, delta=1.0, seed=4, backend=backend,
+                      plan_format="sparse")
+    _assert_plans_equal(dense, sparse)
+    _check_plan_invariants(sparse, pop, b)
+    assert sparse.em_iterations == dense.em_iterations
+
+
+def test_lds_em_client_chunk_same_plan():
+    """Chunked MAP-EM reaches the same fixed point → identical draws."""
+    pop = _noniid_pop(96, seed=3)
+    ref = lds_plan(pop, 48, delta=0.5, seed=2)
+    chunked = lds_plan(pop, 48, delta=0.5, seed=2, em_client_chunk=17,
+                       plan_format="sparse")
+    assert np.array_equal(chunked.local_batch_sizes, ref.local_batch_sizes)
+    assert chunked.em_iterations == ref.em_iterations
+
+
+# ----------------------------------------------------------------- dispatch
+
+def test_make_plan_format_dispatch():
+    pop = _noniid_pop(24, seed=1)
+    for fmt, cls in (("dense", EpochPlan), ("sparse", SparseEpochPlan),
+                     ("auto", EpochPlan)):       # small K → auto = dense
+        plan = make_plan("ugs", pop, 32, seed=0, plan_format=fmt)
+        assert isinstance(plan, cls), fmt
+        plan.validate_against(pop)
+    with pytest.raises(ValueError):
+        make_plan("ugs", pop, 32, plan_format="csr")
+
+
+def test_resolve_plan_format_auto_threshold():
+    assert resolve_plan_format("dense", 10 ** 6, 10 ** 6) == "dense"
+    assert resolve_plan_format("sparse", 1, 1) == "sparse"
+    assert resolve_plan_format("auto", 100, 100) == "dense"
+    big_t = AUTO_SPARSE_MIN_DENSE_ENTRIES // 1000 + 1
+    assert resolve_plan_format("auto", big_t, 1000) == "sparse"
+
+
+def test_sparse_plan_roundtrip_and_validation():
+    pop = _noniid_pop(32, seed=11)
+    sparse = make_plan("ugs", pop, 16, seed=1, plan_format="sparse")
+    dense = sparse.to_dense()
+    assert isinstance(dense, EpochPlan)
+    assert np.array_equal(dense.to_sparse().local_batch_sizes,
+                          sparse.local_batch_sizes)
+    sparse.validate_against(pop)
+    # corrupting a count breaks depletion → validate must notice
+    bad = SparseEpochPlan(
+        step_offsets=sparse.step_offsets,
+        client_ids=sparse.client_ids,
+        draw_counts=np.where(np.arange(sparse.nnz) == 0,
+                             sparse.draw_counts + 1, sparse.draw_counts),
+        num_clients=sparse.num_clients,
+        global_batch_size=sparse.global_batch_size, method=sparse.method)
+    with pytest.raises(AssertionError):
+        bad.validate_against(pop)
+
+
+# ------------------------------------------------------------ batch assembly
+
+def _toy_store(pop, seed=0):
+    rng = np.random.default_rng(seed)
+    d = int(pop.total_size)
+    features = rng.normal(size=(d, 3)).astype(np.float32)
+    labels = rng.integers(0, pop.num_classes, size=d)
+    parts = np.split(np.arange(d),
+                     np.cumsum(pop.dataset_sizes)[:-1])
+    return ClientStore.from_partition(features, labels, list(parts), pop)
+
+
+@pytest.mark.parametrize("aggregation", ["global_mean", "client_weighted"])
+@pytest.mark.parametrize("num_shards", [None, 4])
+def test_iterator_batches_bit_identical_across_formats(aggregation,
+                                                       num_shards):
+    """GlobalBatchIterator(dense plan) ≡ GlobalBatchIterator(sparse plan)."""
+    pop = _noniid_pop(20, seed=2)
+    store = _toy_store(pop, seed=3)
+    dense = make_plan("ugs", pop, 32, seed=5)
+    sparse = make_plan("ugs", pop, 32, seed=5, plan_format="sparse")
+    batches_d = list(GlobalBatchIterator(store, dense, aggregation, seed=7,
+                                         num_shards=num_shards))
+    batches_s = list(GlobalBatchIterator(store, sparse, aggregation, seed=7,
+                                         num_shards=num_shards))
+    assert len(batches_d) == len(batches_s) == dense.num_steps
+    for gb_d, gb_s in zip(batches_d, batches_s):
+        for key in gb_d:
+            assert np.array_equal(np.asarray(gb_d[key]),
+                                  np.asarray(gb_s[key])), key
+
+
+def test_store_from_flat_matches_from_partition():
+    """The view-free store is interchangeable with the partition store."""
+    pop = _noniid_pop(16, seed=4)
+    store = _toy_store(pop, seed=6)
+    flat_f, flat_l, base = store.flat_arrays()
+    flat_store = ClientStore.from_flat(flat_f, flat_l, base, pop)
+    assert flat_store.num_clients == pop.num_clients
+    plan = make_plan("ugs", pop, 24, seed=8, plan_format="sparse")
+    for gb_a, gb_b in zip(GlobalBatchIterator(store, plan.to_dense(),
+                                              seed=9),
+                          GlobalBatchIterator(flat_store, plan, seed=9)):
+        assert np.array_equal(gb_a["features"], gb_b["features"])
+        assert np.array_equal(gb_a["labels"], gb_b["labels"])
+        assert np.array_equal(gb_a["weights"], gb_b["weights"])
+
+
+# -------------------------------------------------------------- million-K
+
+@pytest.mark.slow
+def test_sparse_plan_million_clients_memory_and_streaming():
+    """K = 1e6: the sparse plan builds, its memory scales with T·B (not
+    T·K), and the iterator streams the first steps correctly."""
+    pytest.importorskip("jax")
+    k = 1_000_000
+    b = 8192
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(1, 3, size=k)          # D ≈ 1.5e6
+    counts = np.zeros((k, 2), np.int64)
+    counts[np.arange(k), rng.integers(0, 2, k)] = sizes
+    pop = ClientPopulation(sizes, counts, np.zeros(k))
+    plan = ugs_plan(pop, b, seed=0, backend="jax", plan_format="sparse")
+    t_steps = plan.num_steps
+    assert t_steps == -(-int(sizes.sum()) // b)
+    _check_plan_invariants(plan, pop, b)
+    # memory ceiling: segments hold ≤ T·B entries at 8 bytes (two int32
+    # arrays) plus the (T+1,) offsets — the dense/sparse ratio is ~K/B
+    dense_bytes = t_steps * k * 8
+    ceiling = t_steps * b * 8 + (t_steps + 1) * 8 + 4096
+    assert plan.plan_nbytes <= ceiling
+    assert plan.plan_nbytes < dense_bytes / 100
+    with pytest.raises(ValueError):
+        plan.local_batch_sizes       # guarded densify must refuse at this K
+
+    # stream the first 3 steps: features are the owning client's id, so a
+    # correct gather is self-evident slot by slot
+    base = np.cumsum(sizes) - sizes
+    flat_f = np.repeat(np.arange(k, dtype=np.int64),
+                       sizes).astype(np.float32)
+    flat_l = np.zeros(flat_f.shape[0], np.int8)
+    store = ClientStore.from_flat(flat_f, flat_l, base, pop)
+    it = iter(GlobalBatchIterator(store, plan, seed=1))
+    for t in range(3):
+        gb = next(it)
+        ids, cnts = plan.step_segments(t)
+        expect_cids = np.repeat(np.asarray(ids, np.int64),
+                                np.asarray(cnts, np.int64))
+        assert gb["features"].shape[0] == b
+        valid = gb["client_ids"] >= 0
+        assert np.array_equal(gb["client_ids"][valid], expect_cids)
+        assert np.array_equal(gb["features"][valid].astype(np.int64),
+                              expect_cids)
+        assert np.all(gb["weights"][valid] == 1.0)
