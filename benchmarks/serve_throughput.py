@@ -19,6 +19,11 @@ additionally checks that the continuous engine's greedy outputs are
 token-identical to single-request decoding for N requests of the largest
 scenario (all of them with ``--verify -1``).
 
+The largest scenario is also re-served with telemetry on vs off
+(``spec.obs``, repro.obs) and the wall-time delta lands in the report's
+``obs_overhead`` block; ``--obs-gate PCT`` turns it into a CI gate
+(docs/observability.md).
+
 Usage:
   PYTHONPATH=src python benchmarks/serve_throughput.py            # full
   PYTHONPATH=src python benchmarks/serve_throughput.py --smoke    # CI
@@ -76,6 +81,37 @@ def best_of_2(spec: api.ServeSpec):
     return ctx, report
 
 
+def measure_obs_overhead(ctx, spec: api.ServeSpec, out_dir,
+                         passes: int = 5) -> dict:
+    """Tracing-enabled vs disabled wall time on one scenario (min-of-N).
+
+    Reuses the already-warm engine; the enabled pass writes real trace
+    artifacts (and parses the Chrome JSON back as a sanity check), so the
+    number includes export cost, not just span collection.
+    """
+    out_dir = pathlib.Path(out_dir)
+    trace = out_dir / "obs_overhead_trace.json"
+    events = out_dir / "obs_overhead_events.jsonl"
+    enabled_spec = api.apply_overrides(spec, [
+        "obs.enabled=true", f"obs.trace_path={trace}",
+        f"obs.events_path={events}"])
+    disabled = min(api.run_serve(spec, ctx=ctx).wall_s
+                   for _ in range(passes))
+    enabled = min(api.run_serve(enabled_spec, ctx=ctx).wall_s
+                  for _ in range(passes))
+    doc = json.loads(trace.read_text())          # artifact must parse
+    assert doc["traceEvents"], "enabled run produced an empty trace"
+    trace.unlink()                               # scratch, not a report
+    events.unlink(missing_ok=True)
+    overhead = enabled - disabled
+    pct = 100.0 * overhead / disabled if disabled > 0 else 0.0
+    return {"disabled_wall_s": round(disabled, 5),
+            "enabled_wall_s": round(enabled, 5),
+            "overhead_s": round(overhead, 5),
+            "overhead_pct": round(pct, 2),
+            "trace_events": len(doc["traceEvents"])}
+
+
 def static_json(report) -> dict:
     """The static scenario entry (same fields as the pre-spec benchmark:
     decode_tokens counts ride-along steps, decode_tok_per_s uses the
@@ -123,6 +159,12 @@ def main():
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI configuration")
+    ap.add_argument("--obs-gate", type=float, default=None, metavar="PCT",
+                    help="measure tracing-enabled vs disabled overhead on "
+                         "the largest scenario and fail if it exceeds PCT "
+                         "percent (with a 2ms absolute floor so "
+                         "millisecond-scale smoke walls don't gate on "
+                         "scheduler jitter)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -183,8 +225,27 @@ def main():
                            "max_new_tokens": max_news,
                            "slot_len": slot_len},
               "scenarios": scenarios}
+
+    n = max(args.queued)
+    obs = measure_obs_overhead(
+        ctx, scenario_spec(base, "continuous", n, min(args.budget, n),
+                           args.seed),
+        pathlib.Path(args.out).resolve().parent)
+    result["obs_overhead"] = obs
+    print(f"obs overhead: disabled {obs['disabled_wall_s']*1e3:.2f}ms "
+          f"enabled {obs['enabled_wall_s']*1e3:.2f}ms "
+          f"({obs['overhead_pct']:+.2f}%, "
+          f"{obs['trace_events']} trace events)")
+
     pathlib.Path(args.out).write_text(json.dumps(result, indent=2) + "\n")
     print(f"wrote {args.out}")
+
+    if args.obs_gate is not None \
+            and obs["overhead_pct"] > args.obs_gate \
+            and obs["overhead_s"] > 2e-3:
+        raise SystemExit(
+            f"tracing overhead {obs['overhead_pct']:.2f}% exceeds the "
+            f"--obs-gate {args.obs_gate}% budget")
 
 
 if __name__ == "__main__":

@@ -33,15 +33,15 @@ from repro.api.serving import (ServeContext, build_serve_context,
                                verify_report)
 from repro.api.specs import (AdmissionSpec, ClockSpec, DataSpec,
                              EngineSpec, EvalSpec, ExecutionSpec,
-                             ExperimentSpec, ModelSpec, OptimizerSpec,
-                             ProtocolSpec, ReportSpec, SamplerSpec,
-                             SchedulerSpec, ServeSpec, SpecError,
-                             StragglerSpec, WorkloadSpec)
+                             ExperimentSpec, ModelSpec, ObsSpec,
+                             OptimizerSpec, ProtocolSpec, ReportSpec,
+                             SamplerSpec, SchedulerSpec, ServeSpec,
+                             SpecError, StragglerSpec, WorkloadSpec)
 
 __all__ = [
     "ExperimentSpec", "ModelSpec", "OptimizerSpec", "DataSpec",
     "SamplerSpec", "ProtocolSpec", "ExecutionSpec", "EvalSpec",
-    "StragglerSpec", "SpecError",
+    "ObsSpec", "StragglerSpec", "SpecError",
     "ServeSpec", "EngineSpec", "AdmissionSpec", "SchedulerSpec",
     "WorkloadSpec", "ClockSpec", "ReportSpec",
     "run", "fit", "build_context", "build_data", "build_model",

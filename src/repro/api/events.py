@@ -79,8 +79,12 @@ class PlanStatsCallback(Callback):
 class StragglerTPECallback(Callback):
     """Analytic epoch TPE from the plan + client delays (fused engine).
 
-    With ``track=False`` only the empty ``tpe_ms`` extras slot is created
-    (the stable result shape) and nothing is simulated.
+    Streams the plan's ``step_segments`` (never the dense (T, K) matrix),
+    so it costs O(active clients) per step and works unchanged on sparse
+    million-client plans — this is what lets ``plan_format="auto"`` be
+    the spec default. With ``track=False`` only the empty ``tpe_ms``
+    extras slot is created (the stable result shape) and nothing is
+    simulated.
     """
 
     def __init__(self, base_step_ms: float = 60.0, track: bool = True):
@@ -92,9 +96,9 @@ class StragglerTPECallback(Callback):
             record.extras.setdefault("tpe_ms", [])
         elif self.track and event.name == "plan" \
                 and event.plan is not None:
-            from repro.core.straggler import simulate_tpe
-            record.extras["tpe_ms"].append(simulate_tpe(
-                event.plan.local_batch_sizes, ctx.data.pop.delays,
+            from repro.core.straggler import simulate_tpe_segments
+            record.extras["tpe_ms"].append(simulate_tpe_segments(
+                event.plan, ctx.data.pop.delays,
                 base_step_ms=self.base_step_ms).total_ms)
 
 

@@ -8,6 +8,15 @@ epoch_end / run_end) that callbacks turn into evaluation, timing, straggler
 accounting, and checkpoints. ``repro.api.run`` builds the context from an
 ExperimentSpec; the legacy ``repro.frameworks`` trainers build it from
 already-constructed objects — both end here.
+
+Telemetry (``ctx.spec.obs``, repro.obs): when enabled, the loop wraps each
+phase in tracer spans — ``plan`` (epoch planning), ``batch`` (host batch
+assembly, one per step), ``device_step`` (the strategy's jit step), and
+``eval`` (end-of-epoch callbacks) under per-epoch ``epoch`` spans — and
+feeds each step's plan segment to a live GPSL invariant monitor
+(repro.obs.monitor), whose per-epoch summaries land in
+``record.extras["gpsl_monitor"]``. Instrumentation touches no RNG and no
+batch content: an instrumented run is bitwise-identical to a disabled one.
 """
 from __future__ import annotations
 
@@ -16,6 +25,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.api.events import EventBus
 from repro.api.registry import ProtocolStrategy
+from repro.obs import (maybe_jax_profiler, monitor_from_spec,
+                       tracer_from_spec, write_outputs)
 
 
 @dataclasses.dataclass
@@ -101,37 +112,78 @@ class RunResult:
         return self.history.best
 
 
+_END = object()                       # batch-stream exhaustion sentinel
+
+
 def fit(ctx: RunContext, strategy: ProtocolStrategy,
-        callbacks=()) -> RunResult:
-    """Run ``strategy`` under ``ctx`` for ``ctx.protocol.epochs`` epochs."""
+        callbacks=(), tracer=None) -> RunResult:
+    """Run ``strategy`` under ``ctx`` for ``ctx.protocol.epochs`` epochs.
+
+    ``tracer`` defaults to one built from ``ctx.spec.obs`` (the shared
+    no-op NullTracer when absent or disabled); pass an explicit
+    ``repro.obs.Tracer`` to collect spans programmatically.
+    """
+    obs = getattr(ctx.spec, "obs", None)
+    if tracer is None:
+        tracer = tracer_from_spec(
+            obs, meta={"kind": "train",
+                       "protocol": getattr(ctx.protocol, "name", "?")})
     record = RunRecord()
     bus = EventBus(callbacks, ctx, record)
     pstate = strategy.setup(ctx)
     max_steps = ctx.execution.max_steps
     bus.emit("run_begin")
     stop = False
-    for epoch in range(ctx.protocol.epochs):
-        bus.emit("epoch_begin", epoch=epoch)
-        plan = strategy.plan_epoch(ctx, epoch)
-        if plan is not None:
-            bus.emit("plan", epoch=epoch, plan=plan)
-        for item in strategy.epoch_batches(ctx, pstate, plan, epoch):
-            pstate, metrics = strategy.step(ctx, pstate, item)
-            record.step_metrics.append(metrics)
-            record.steps += 1
-            bus.emit("step_end", epoch=epoch, step=record.steps,
-                     metrics=metrics, info=item.info)
-            if max_steps is not None and record.steps >= max_steps:
-                stop = True
+    pop = getattr(ctx.data, "pop", None)
+    with maybe_jax_profiler(obs), tracer.span("run", cat="train"):
+        for epoch in range(ctx.protocol.epochs):
+            with tracer.span("epoch", cat="train", epoch=epoch):
+                bus.emit("epoch_begin", epoch=epoch)
+                with tracer.span("plan", cat="plan", epoch=epoch):
+                    plan = strategy.plan_epoch(ctx, epoch)
+                if plan is not None:
+                    bus.emit("plan", epoch=epoch, plan=plan)
+                monitor = None
+                if plan is not None and pop is not None:
+                    monitor = monitor_from_spec(
+                        obs, pop, plan.global_batch_size, epoch=epoch,
+                        num_steps=plan.num_steps, tracer=tracer)
+                epoch_step = 0
+                batches = iter(strategy.epoch_batches(ctx, pstate, plan,
+                                                      epoch))
+                while True:
+                    with tracer.span("batch", cat="data", epoch=epoch):
+                        item = next(batches, _END)
+                    if item is _END:
+                        break
+                    if monitor is not None \
+                            and epoch_step < plan.num_steps:
+                        monitor.observe_plan_step(plan, epoch_step)
+                    with tracer.span("device_step", cat="step",
+                                     epoch=epoch, step=record.steps):
+                        pstate, metrics = strategy.step(ctx, pstate, item)
+                    record.step_metrics.append(metrics)
+                    record.steps += 1
+                    epoch_step += 1
+                    bus.emit("step_end", epoch=epoch, step=record.steps,
+                             metrics=metrics, info=item.info)
+                    if max_steps is not None and record.steps >= max_steps:
+                        stop = True
+                        break
+                if monitor is not None:
+                    summary = monitor.finish()
+                    record.extras.setdefault("gpsl_monitor", []).append(
+                        summary.to_dict())
+                pstate = strategy.end_epoch(ctx, pstate, epoch)
+                with tracer.span("eval", cat="eval", epoch=epoch):
+                    bus.emit("epoch_end", epoch=epoch,
+                             params=strategy.eval_params(ctx, pstate))
+            if stop:
                 break
-        pstate = strategy.end_epoch(ctx, pstate, epoch)
-        bus.emit("epoch_end", epoch=epoch,
-                 params=strategy.eval_params(ctx, pstate))
-        if stop:
-            break
-    strategy.finalize(ctx, pstate, record)
-    params = strategy.eval_params(ctx, pstate)
-    bus.emit("run_end", params=params)
+        strategy.finalize(ctx, pstate, record)
+        params = strategy.eval_params(ctx, pstate)
+        bus.emit("run_end", params=params)
+    write_outputs(tracer, obs)
     # one host sync at the end instead of one per step
     step_metrics = [{k: float(v) for k, v in m.items()}
                     for m in record.step_metrics]

@@ -24,6 +24,7 @@ import numpy as np
 from repro.api.registry import get_engine
 from repro.api.runner import build_model
 from repro.api.specs import ServeSpec, SpecError
+from repro.obs import maybe_jax_profiler, tracer_from_spec, write_outputs
 
 
 @dataclasses.dataclass
@@ -142,17 +143,41 @@ def run_serve(spec: ServeSpec, ctx: Optional[ServeContext] = None):
     Pass a prebuilt ``ctx`` to reuse an engine across runs (warmup + timed
     benchmark passes); the spec argument then rebinds the workload and
     scheduling axes while the engine keeps its compiled functions.
+
+    Telemetry (``spec.obs``, repro.obs): when enabled, a tracer is built
+    on the spec's scheduler clock — so a VirtualClock run yields a
+    deterministic trace — and handed down through ``engine.serve``, which
+    emits scheduler-phase spans (admit/decode_step/wait) and per-request
+    enqueue→admit→prefill→decode→complete lifecycle spans. Artifacts go
+    to ``spec.obs.trace_path`` / ``events_path``; instrumentation changes
+    no served token.
     """
     if ctx is None:
         ctx = build_serve_context(spec)
     else:
         spec.validate()
         ctx = dataclasses.replace(ctx, spec=spec)
+    obs = getattr(spec, "obs", None)
+    clock = tracer = None
+    if obs is not None and obs.enabled:
+        from repro.runtime.scheduler import make_clock
+        clock = make_clock(spec.clock.kind, spec.clock.tick_s)
+        tracer = tracer_from_spec(
+            obs, clock=clock.now,
+            meta={"kind": "serve", "engine": spec.engine.name,
+                  "clock": spec.clock.kind})
     requests = build_workload(spec, ctx.engine.cfg.vocab_size)
-    report = ctx.engine.serve(requests, spec)
+    with maybe_jax_profiler(obs):
+        report = ctx.engine.serve(requests, spec, clock=clock,
+                                  tracer=tracer)
     if spec.report.verify:
         report.verified = verify_report(report, ctx, requests=requests,
                                         n=spec.report.verify)
+    if tracer is not None:
+        tracer.record("serve_report", **{
+            k: v for k, v in report.to_json().items()
+            if k != "per_request"})
+        write_outputs(tracer, obs)
     if spec.report.out:
         j = report.to_json()
         if not spec.report.per_request:

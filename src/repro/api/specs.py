@@ -202,12 +202,13 @@ class SamplerSpec(SpecBase):
 
     ``plan_format`` picks the epoch-plan representation: "dense" — the
     (T, K) matrix; "sparse" — per-step active-client segments (O(T·B)
-    memory, the million-client path); "auto" — sparse once the dense matrix
-    would be large. Draws are format-independent.
+    memory, the million-client path); "auto" (default) — sparse once the
+    dense matrix would be large. Draws are format-independent, so the
+    composed batches are bit-identical across formats.
     """
     method: str = "ugs"
     backend: str = "numpy"
-    plan_format: str = "dense"
+    plan_format: str = "auto"
     kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def validate(self) -> "SamplerSpec":
@@ -279,6 +280,34 @@ class ExecutionSpec(SpecBase):
 
 
 @dataclasses.dataclass(frozen=True)
+class ObsSpec(SpecBase):
+    """Telemetry (repro.obs): span tracing, event log, invariant monitors.
+
+    Off by default — a disabled run goes through the no-op
+    ``repro.obs.trace.NullTracer`` and must be bitwise-identical (losses)
+    / token-identical (serving) to an instrumented one. ``trace_path``
+    writes the Chrome trace-event/Perfetto JSON; ``events_path`` the
+    structured JSONL event log (spans + GPSL monitor records);
+    ``monitor`` arms the live GPSL invariant monitors on plan-driven
+    training runs (``monitor_delta`` is the whole-epoch false-alarm mass
+    of the Serfling deviation check); ``jax_profiler_dir`` additionally
+    captures an XLA-level ``jax.profiler`` trace. Summarize artifacts
+    with ``tools/trace_report.py``; model and schema: docs/observability.md.
+    """
+    enabled: bool = False
+    trace_path: Optional[str] = None
+    events_path: Optional[str] = None
+    monitor: bool = True
+    monitor_delta: float = 0.05
+    jax_profiler_dir: Optional[str] = None
+
+    def validate(self) -> "ObsSpec":
+        self._require(0.0 < self.monitor_delta < 1.0,
+                      "monitor_delta must be in (0, 1)")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
 class EvalSpec(SpecBase):
     """Held-out evaluation cadence (classification workloads)."""
     enabled: bool = True
@@ -304,13 +333,14 @@ class ExperimentSpec(SpecBase):
     execution: ExecutionSpec = dataclasses.field(
         default_factory=ExecutionSpec)
     eval: EvalSpec = dataclasses.field(default_factory=EvalSpec)
+    obs: ObsSpec = dataclasses.field(default_factory=ObsSpec)
     kind: str = "experiment"        # run(spec) / load_any_spec dispatch tag
 
     def validate(self) -> "ExperimentSpec":
         self._require(self.kind == "experiment",
                       f"kind must be 'experiment', got {self.kind!r}")
         for sub in (self.model, self.optimizer, self.data, self.sampler,
-                    self.protocol, self.execution, self.eval):
+                    self.protocol, self.execution, self.eval, self.obs):
             sub.validate()
         if self.data.kind == "synthetic_lm":
             self._require(self.protocol.name == "psl",
@@ -473,6 +503,7 @@ class ServeSpec(SpecBase):
         default_factory=WorkloadSpec)
     clock: ClockSpec = dataclasses.field(default_factory=ClockSpec)
     report: ReportSpec = dataclasses.field(default_factory=ReportSpec)
+    obs: ObsSpec = dataclasses.field(default_factory=ObsSpec)
     checkpoint: Optional[str] = None
 
     # -- derived geometry (the None-default resolution chain) ----------
@@ -494,7 +525,7 @@ class ServeSpec(SpecBase):
         self._require(self.kind == "serve",
                       f"kind must be 'serve', got {self.kind!r}")
         for sub in (self.model, self.engine, self.admission, self.scheduler,
-                    self.workload, self.clock, self.report):
+                    self.workload, self.clock, self.report, self.obs):
             sub.validate()
         self._require(self.model.arch != "paper-cnn",
                       "serving needs a decoder LM arch, not the "

@@ -18,6 +18,7 @@ from repro.core.deviation import (batch_deviation, lemma1_bound, lemma2_bound,
 from repro.core.partition import partition_dirichlet, partition_iid
 from repro.core.straggler import (adjust_concentration, assign_delays,
                                   delay_zscores, simulate_tpe,
+                                  simulate_tpe_segments,
                                   straggler_arrivals)
 
 __all__ = [
@@ -30,5 +31,6 @@ __all__ = [
     "lemma2_terms", "serfling_bound", "serfling_epsilon",
     "simulate_plan_deviation", "partition_dirichlet",
     "partition_iid", "adjust_concentration", "assign_delays",
-    "delay_zscores", "simulate_tpe", "straggler_arrivals",
+    "delay_zscores", "simulate_tpe", "simulate_tpe_segments",
+    "straggler_arrivals",
 ]

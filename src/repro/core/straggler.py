@@ -95,3 +95,31 @@ def simulate_tpe(local_batch_sizes: np.ndarray, delays: np.ndarray,
     per_step = base_step_ms + eff.max(axis=1)
     return TPEResult(per_step_ms=per_step, total_ms=float(per_step.sum()),
                      contributing=contributing.sum(axis=1).astype(np.int64))
+
+
+def simulate_tpe_segments(plan, delays: np.ndarray,
+                          base_step_ms: float = 60.0,
+                          per_sample_ms: float = 0.0) -> TPEResult:
+    """:func:`simulate_tpe` streamed off a plan's ``step_segments``.
+
+    Identical result (only contributing clients — ``B_k^t > 0`` — enter
+    the max, and a step's segment lists exactly those), but never touches
+    ``plan.local_batch_sizes``, so it works unchanged on sparse
+    million-client plans where the dense (T, K) matrix would not fit.
+    Accepts any plan exposing ``num_steps`` and ``step_segments(t)``
+    (EpochPlan and SparseEpochPlan both do).
+    """
+    delays = np.asarray(delays, dtype=np.float64)
+    T = int(plan.num_steps)
+    per_step = np.empty(T, np.float64)
+    contributing = np.empty(T, np.int64)
+    for t in range(T):
+        ids, cnts = plan.step_segments(t)
+        ids = np.asarray(ids, np.int64)
+        cnts = np.asarray(cnts, np.float64)
+        active = cnts > 0
+        eff = delays[ids[active]] + cnts[active] * per_sample_ms
+        per_step[t] = base_step_ms + (float(eff.max()) if eff.size else 0.0)
+        contributing[t] = int(np.count_nonzero(active))
+    return TPEResult(per_step_ms=per_step, total_ms=float(per_step.sum()),
+                     contributing=contributing)

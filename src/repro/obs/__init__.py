@@ -1,0 +1,36 @@
+"""`repro.obs` — the shared telemetry layer for training and serving.
+
+One instrumentation surface, three parts (see docs/observability.md):
+
+* :mod:`repro.obs.trace` — nested timed spans on a pluggable clock
+  (wall or the serving VirtualClock, so simulated traces are
+  deterministic), exported as Chrome trace-event/Perfetto JSON and as a
+  structured JSONL event log. Disabled runs go through a
+  :class:`repro.obs.trace.NullTracer` whose every operation is a no-op.
+* :mod:`repro.obs.metrics` — counter/gauge/histogram registry with
+  streaming (P²) percentiles, plus the shared :func:`percentiles`
+  helper behind every ServeReport latency summary.
+* :mod:`repro.obs.monitor` — live GPSL invariant monitors that stream
+  an epoch plan's ``step_segments`` and check per-step class-proportion
+  deviation against the Serfling bound, effective-batch-size fixedness,
+  and data-depletion residual mass.
+
+The training loop (:func:`repro.api.loop.fit`) and the serving runtime
+(:mod:`repro.runtime.scheduler`) both emit into this layer; an
+``ObsSpec`` on :class:`repro.api.ExperimentSpec`/``ServeSpec`` switches
+it on per run, and ``tools/trace_report.py`` summarizes the artifacts.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               P2Quantile, percentiles)
+from repro.obs.monitor import (GPSLMonitor, MonitorSummary,
+                               monitor_from_spec)
+from repro.obs.trace import (NullTracer, Tracer, maybe_jax_profiler,
+                             null_tracer, tracer_from_spec, write_outputs)
+
+__all__ = [
+    "Tracer", "NullTracer", "null_tracer", "tracer_from_spec",
+    "write_outputs", "maybe_jax_profiler",
+    "percentiles", "P2Quantile", "Counter", "Gauge", "Histogram",
+    "MetricsRegistry",
+    "GPSLMonitor", "MonitorSummary", "monitor_from_spec",
+]

@@ -32,16 +32,32 @@ import numpy as np
 
 from repro.api.registry import register_engine
 from repro.models import build_model
+from repro.obs.metrics import percentiles
 from repro.runtime.kvcache import KVCachePool
 from repro.runtime.queue import ServeRequest
 
+# the one latency-summary helper (mean/p50/p95/p99/max) now lives in
+# repro.obs.metrics; kept under the old private name for callers that
+# reached in here.
+_percentiles = percentiles
 
-def _percentiles(xs: List[float]) -> Dict[str, float]:
-    if not xs:
-        return {"mean": 0.0, "p50": 0.0, "p95": 0.0, "max": 0.0}
-    a = np.asarray(xs, np.float64)
-    return {"mean": float(a.mean()), "p50": float(np.percentile(a, 50)),
-            "p95": float(np.percentile(a, 95)), "max": float(a.max())}
+
+def request_rows(records: Dict[int, Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Per-request report rows from engine-style lifecycle records.
+
+    Shared by the continuous engine and the static server so both
+    ServeReports carry the identical field set (docs/serving.md)."""
+    rows = []
+    for rid in sorted(records):
+        r = records[rid]
+        rows.append({
+            "rid": rid, "prompt_len": r["prompt_len"],
+            "new_tokens": len(r["tokens"]),
+            "arrival_s": round(r["arrival_s"], 6),
+            "ttft_ms": (r["first_token_s"] - r["arrival_s"]) * 1e3,
+            "latency_ms": (r["done_s"] - r["arrival_s"]) * 1e3,
+            "tokens": r["tokens"]})
+    return rows
 
 
 @dataclasses.dataclass
@@ -59,6 +75,10 @@ class ServeReport:
     step_active: List[int]
     per_request: List[Dict[str, Any]]
     verified: Optional[Dict[str, Any]] = None   # token-identity audit
+    # static server: the whole batch shares one post-prefill TTFT stamp
+    # (no per-request admission exists there) — flagged so consumers don't
+    # read its ttft percentiles as a distribution.
+    ttft_shared: bool = False
 
     @property
     def requests_per_s(self) -> float:
@@ -69,8 +89,8 @@ class ServeReport:
         return self.decode_tokens / self.wall_s if self.wall_s > 0 else 0.0
 
     def to_json(self) -> Dict[str, Any]:
-        ttft = _percentiles([r["ttft_ms"] for r in self.per_request])
-        lat = _percentiles([r["latency_ms"] for r in self.per_request])
+        ttft = percentiles([r["ttft_ms"] for r in self.per_request])
+        lat = percentiles([r["latency_ms"] for r in self.per_request])
         out = {"engine": self.engine, "arch": self.arch,
                 "wall_s": round(self.wall_s, 4),
                 "num_requests": self.num_requests,
@@ -81,14 +101,15 @@ class ServeReport:
                 "max_active": self.max_active,
                 "requests_per_s": round(self.requests_per_s, 2),
                 "decode_tok_per_s": round(self.decode_tok_per_s, 2),
-                "ttft_ms": ttft, "latency_ms": lat,
+                "ttft_ms": ttft, "ttft_shared": self.ttft_shared,
+                "latency_ms": lat,
                 "per_request": self.per_request}
         if self.verified is not None:
             out["verified"] = self.verified
         return out
 
     def summary(self) -> str:
-        ttft = _percentiles([r["ttft_ms"] for r in self.per_request])
+        ttft = percentiles([r["ttft_ms"] for r in self.per_request])
         return (f"[{self.engine}] {self.num_requests} requests in "
                 f"{self.wall_s:.2f}s — {self.requests_per_s:.1f} req/s, "
                 f"{self.decode_tok_per_s:.1f} decode tok/s, "
@@ -155,17 +176,20 @@ class ContinuousEngine:
                    model=model)
 
     def serve(self, requests: List[ServeRequest], spec,
-              clock=None) -> ServeReport:
+              clock=None, tracer=None) -> ServeReport:
         """One spec-driven serving run: scheduler stack from the spec's
         admission/scheduler/clock sub-specs, then drain ``requests``.
 
         Resets per-request bookkeeping first (compiled functions survive),
         so one engine can serve warmup + timed passes back to back.
+        ``tracer`` (repro.obs) receives scheduler-phase and per-request
+        lifecycle spans; build it on the same clock for coherent traces.
         """
         from repro.runtime.scheduler import Scheduler
         if self.steps or self.records:
             self.reset()
-        return Scheduler.from_spec(self, spec, clock=clock).run(requests)
+        sched = Scheduler.from_spec(self, spec, clock=clock, tracer=tracer)
+        return sched.run(requests)
 
     def reset(self) -> None:
         """Forget all requests/stats but keep params and compiled fns.
@@ -222,6 +246,7 @@ class ContinuousEngine:
 
     def _admit_chunk(self, chunk: List[ServeRequest], plen: int,
                      now) -> None:
+        t_start = _resolve_now(now)    # prefill begins: enqueue ends here
         tokens = jnp.asarray(np.stack([r.prompt for r in chunk]))
         logits, cache, _ = self._prefill(self.params, {"tokens": tokens})
         firsts = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
@@ -231,8 +256,8 @@ class ContinuousEngine:
             first = int(firsts[row])
             rec = {"rid": req.rid, "prompt_len": plen,
                    "max_new_tokens": req.max_new_tokens,
-                   "arrival_s": req.arrival_s, "admit_s": t,
-                   "first_token_s": t, "done_s": None,
+                   "arrival_s": req.arrival_s, "admit_start_s": t_start,
+                   "admit_s": t, "first_token_s": t, "done_s": None,
                    "tokens": [first]}
             self.records[req.rid] = rec
             if req.max_new_tokens == 1:
@@ -296,16 +321,7 @@ class ContinuousEngine:
     def build_report(self, engine_name: str, wall_s: float,
                      token_budget: Optional[int],
                      step_active: List[int]) -> ServeReport:
-        per_request = []
-        for rid in sorted(self.records):
-            r = self.records[rid]
-            per_request.append({
-                "rid": rid, "prompt_len": r["prompt_len"],
-                "new_tokens": len(r["tokens"]),
-                "arrival_s": round(r["arrival_s"], 6),
-                "ttft_ms": (r["first_token_s"] - r["arrival_s"]) * 1e3,
-                "latency_ms": (r["done_s"] - r["arrival_s"]) * 1e3,
-                "tokens": r["tokens"]})
+        per_request = request_rows(self.records)
         return ServeReport(
             engine=engine_name, arch=self.cfg.name, wall_s=wall_s,
             num_requests=len(per_request),

@@ -31,6 +31,7 @@ from repro.api.registry import (get_admission_policy, get_scheduler_policy,
                                 register_scheduler_policy)
 # re-export (compat): the one shared arrival model lives in repro.core
 from repro.core.straggler import straggler_arrivals  # noqa: F401
+from repro.obs.trace import null_tracer
 from repro.runtime.engine import ContinuousEngine, ServeReport
 from repro.runtime.queue import RequestQueue, ServeRequest
 
@@ -103,7 +104,9 @@ class Scheduler:
     def __init__(self, engine: ContinuousEngine,
                  token_budget: Optional[int] = None, clock=None,
                  max_admits_per_step: Optional[int] = None,
-                 policy: str = "fifo", admission: str = "budget"):
+                 policy: str = "fifo", admission: str = "budget",
+                 tracer=None):
+        self.tracer = tracer if tracer is not None else null_tracer()
         self.policy = policy
         self._policy = get_scheduler_policy(policy)()
         self.engine = engine
@@ -122,12 +125,14 @@ class Scheduler:
 
     @classmethod
     def from_spec(cls, engine: ContinuousEngine, spec,
-                  clock=None) -> "Scheduler":
+                  clock=None, tracer=None) -> "Scheduler":
         """Build the scheduling stack a ServeSpec describes around ``engine``.
 
         Policies resolve through the registries
         (``spec.scheduler.policy`` / ``spec.admission.policy``); the clock
-        comes from ``spec.clock`` unless one is passed explicitly.
+        comes from ``spec.clock`` unless one is passed explicitly. A
+        ``tracer`` (repro.obs) built on the same clock receives phase spans
+        (admit/decode_step/wait) and per-request lifecycle spans.
         """
         if clock is None:
             clock = make_clock(spec.clock.kind, spec.clock.tick_s)
@@ -136,7 +141,8 @@ class Scheduler:
                    clock=clock,
                    max_admits_per_step=spec.admission.max_admits_per_step,
                    policy=spec.scheduler.policy,
-                   admission=spec.admission.policy)
+                   admission=spec.admission.policy,
+                   tracer=tracer)
 
     def submit(self, requests: Sequence[ServeRequest]) -> None:
         for r in requests:
@@ -148,6 +154,7 @@ class Scheduler:
         if requests is not None:
             self.submit(requests)
         eng, adm, clock = self.engine, self.admission, self.clock
+        tracer = self.tracer
         ready: List[ServeRequest] = []
         wall0 = time.perf_counter()
         while True:
@@ -164,14 +171,20 @@ class Scheduler:
             if take > 0:
                 # clock.now passed as a callable: the engine stamps TTFT
                 # after the prefill sync, so it includes the compute.
-                eng.admit_batch(ready[:take], clock.now)
+                with tracer.span("admit", cat="prefill", n=take):
+                    eng.admit_batch(ready[:take], clock.now)
                 del ready[:take]
                 adm.note_admit(take)
                 clock.advance()
             if eng.num_active() > 0:
                 adm.note_step(eng.num_active())
-                eng.step(clock.now)
+                with tracer.span("decode_step", cat="decode",
+                                 active=eng.num_active()):
+                    eng.step(clock.now)
                 clock.advance()
+                if tracer.enabled:
+                    tracer.counter("active_slots", eng.num_active())
+                    tracer.counter("queued", len(ready) + len(self.queue))
             elif ready:
                 # budget exhausted with an empty pool cannot happen
                 # (budget ≥ 1); loop back to admit.
@@ -179,10 +192,19 @@ class Scheduler:
             elif self.queue:
                 # idle until the next straggler's prompt arrives — waiting
                 # costs nothing because no admitted request is stalled.
-                self.queue_wait()
+                with tracer.span("wait", cat="idle"):
+                    self.queue_wait()
             else:
                 break
         wall = time.perf_counter() - wall0
+        if tracer.enabled:
+            for rid in sorted(eng.records):
+                r = eng.records[rid]
+                tracer.request_lifecycle(
+                    rid, r["arrival_s"],
+                    r.get("admit_start_s", r["admit_s"]), r["admit_s"],
+                    r["done_s"], prompt_len=r["prompt_len"],
+                    new_tokens=len(r["tokens"]))
         return eng.build_report("continuous", wall, adm.token_budget,
                                 adm.step_active)
 

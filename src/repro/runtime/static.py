@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.api.registry import register_engine
 from repro.models import build_model
-from repro.runtime.engine import ServeReport
+from repro.runtime.engine import ServeReport, request_rows
 from repro.runtime.queue import ServeRequest
 
 
@@ -104,15 +104,18 @@ class BatchedServer:
         return requests
 
     def serve(self, requests: List[ServeRequest], spec=None,
-              clock=None) -> ServeReport:
+              clock=None, tracer=None) -> ServeReport:
         """Spec-driven entry: one static batch over ``requests``.
 
         The static engine cannot honor staggered arrivals (the batch is
         assembled up front), so `arrival_s` is ignored; TTFT is stamped at
-        the end of the padded batch prefill for every row and latency at
-        batch completion — the batch-inflation cost made visible. ``clock``
-        is unused (wall timing only); the parameter keeps the
-        engine-registry `serve` signature uniform.
+        the end of the padded batch prefill **once for the whole batch**
+        (``ServeReport.ttft_shared``) and latency at batch completion —
+        the batch-inflation cost made visible. ``clock`` is unused (wall
+        timing only); the parameter keeps the engine-registry `serve`
+        signature uniform. A ``tracer`` (repro.obs) receives retroactive
+        prefill/decode phase spans and per-request lifecycle spans with
+        run-relative timestamps.
         """
         legacy = [Request(rid=r.rid, prompt=r.prompt,
                           max_new_tokens=r.max_new_tokens)
@@ -123,17 +126,25 @@ class BatchedServer:
         t0 = time.perf_counter()
         out = self.generate(legacy)
         wall = time.perf_counter() - t0
-        ttft_ms = (self._t_first - t0) * 1e3
-        per_request = []
-        for r in sorted(out, key=lambda r: r.rid):
-            per_request.append({
-                "rid": r.rid, "prompt_len": int(len(r.prompt)),
-                "new_tokens": len(r.generated),
-                "arrival_s": 0.0,
-                "ttft_ms": ttft_ms,
-                # one batch: every row waits for the whole cohort
-                "latency_ms": wall * 1e3,
-                "tokens": list(r.generated)})
+        t_first = self._t_first - t0            # run-relative stamps
+        # engine-style lifecycle records: one shared admit/TTFT stamp for
+        # the whole cohort (there is no per-request admission here)
+        records = {r.rid: {"rid": r.rid, "prompt_len": int(len(r.prompt)),
+                           "max_new_tokens": r.max_new_tokens,
+                           "arrival_s": 0.0, "admit_start_s": 0.0,
+                           "admit_s": t_first, "first_token_s": t_first,
+                           "done_s": wall, "tokens": list(r.generated)}
+                   for r in out}
+        if tracer is not None and tracer.enabled:
+            tracer.complete("admit", 0.0, t_first, cat="prefill", n=b)
+            tracer.complete("decode", t_first, wall, cat="decode",
+                            steps=max_new - 1, active=b)
+            for rid in sorted(records):
+                r = records[rid]
+                tracer.request_lifecycle(
+                    rid, r["arrival_s"], r["admit_start_s"], r["admit_s"],
+                    r["done_s"], prompt_len=r["prompt_len"],
+                    new_tokens=len(r["tokens"]))
         return ServeReport(
             engine="static", arch=self.cfg.name, wall_s=wall,
             num_requests=b,
@@ -142,4 +153,4 @@ class BatchedServer:
             decode_tokens=b * (max_new - 1),
             steps=max_new - 1, token_budget=None,
             max_active=b, step_active=[b] * max(max_new - 1, 0),
-            per_request=per_request)
+            per_request=request_rows(records), ttft_shared=True)
