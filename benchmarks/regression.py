@@ -1,0 +1,306 @@
+"""Baseline-diffing perf-regression gate over the committed BENCH_*.json.
+
+The repo commits three benchmark artifacts — ``BENCH_serve.json``
+(serve_throughput), ``BENCH_train.json`` (train_scaling), and
+``BENCH_plan.json`` (fig3 plan scaling). This module turns them into a
+gate: regenerate a fresh document with the same script, flatten both into
+named metrics, and fail (exit 1) when a fresh metric leaves its
+per-metric tolerance band.
+
+Three tolerance classes keep the gate honest on noisy CI machines
+without letting real regressions through:
+
+* **throughput** (requests/s, decode tok/s, steps/s — higher is better):
+  15% relative band, tight enough that the canonical injected-20%
+  regression always trips it;
+* **time** (TTFT/latency percentiles, ms/step, plan seconds — lower is
+  better): 40–50% band, wall-clock on shared runners jitters hard;
+* **count** (steps, tokens, bytes, nnz — exact): zero tolerance.
+  Workload construction is a pure function of the spec, so a changed
+  count is a behavior change, not noise.
+
+Fresh runs are **best-of-N** (direction-aware: max for higher-better,
+min for lower-better, first for exact) so one slow pass cannot fail the
+gate; ``--tol-scale`` widens every band uniformly for known-noisy
+runners. Comparison runs over the *intersection* of metric names, so a
+``--smoke`` regeneration (fewer sweep cells) still gates the cells it
+shares with the full committed baseline — but zero shared metrics is an
+error, never a silent pass.
+
+Usage::
+
+  # compare two existing documents
+  PYTHONPATH=src python benchmarks/regression.py \
+      --baseline BENCH_serve.json --fresh /tmp/fresh_serve.json
+
+  # regenerate + gate (what CI runs; see also benchmarks/run.py --gate)
+  PYTHONPATH=src python benchmarks/regression.py --gate serve,plan
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import tempfile
+from typing import Dict, Iterable, List, Optional, Tuple
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# direction: "higher" (regression = drop), "lower" (regression = rise),
+# "exact" (any change is a regression). Tolerances are relative.
+TOLERANCES: Dict[str, Tuple[str, float]] = {
+    "throughput": ("higher", 0.15),
+    "time": ("lower", 0.50),
+    "count": ("exact", 0.0),
+}
+
+# metric-name suffix → tolerance class (first match wins)
+_SUFFIX_CLASS = [
+    ("requests_per_s", "throughput"),
+    ("decode_tok_per_s", "throughput"),
+    ("steps_per_s", "throughput"),
+    ("ttft_ms.p50", "time"),
+    ("ttft_ms.p95", "time"),
+    ("latency_ms.p50", "time"),
+    ("latency_ms.p95", "time"),
+    ("ms_per_step", "time"),
+    ("plan_seconds", "time"),
+    ("steps", "count"),
+    ("decode_tokens", "count"),
+    ("prefill_tokens", "count"),
+    ("plan_bytes", "count"),
+    ("nnz", "count"),
+    ("total_samples", "count"),
+]
+
+
+def tolerance_class(metric: str) -> str:
+    for suffix, cls in _SUFFIX_CLASS:
+        if metric.endswith(suffix):
+            return cls
+    raise KeyError(f"metric {metric!r} has no tolerance class")
+
+
+def _put(out: Dict[str, float], name: str, obj: dict, key: str,
+         sub: Optional[str] = None) -> None:
+    v = obj.get(key)
+    if sub is not None and isinstance(v, dict):
+        v = v.get(sub)
+    if isinstance(v, (int, float)):
+        out[name] = float(v)
+
+
+def extract_metrics(doc: dict) -> Dict[str, float]:
+    """Flatten a BENCH_*.json document into gateable named metrics.
+
+    Dispatches on ``doc["bench"]``; every emitted name carries a known
+    tolerance-class suffix. Unknown document kinds raise.
+    """
+    bench = doc.get("bench")
+    out: Dict[str, float] = {}
+    if bench == "serve_throughput":
+        for sc in doc.get("scenarios", []):
+            pre = f"serve.q{sc['queued']}.b{sc['budget']}"
+            st, co = sc.get("static", {}), sc.get("continuous", {})
+            _put(out, f"{pre}.static.requests_per_s", st, "requests_per_s")
+            _put(out, f"{pre}.static.decode_tok_per_s", st,
+                 "decode_tok_per_s")
+            _put(out, f"{pre}.continuous.requests_per_s", co,
+                 "requests_per_s")
+            _put(out, f"{pre}.continuous.decode_tok_per_s", co,
+                 "decode_tok_per_s")
+            _put(out, f"{pre}.continuous.ttft_ms.p95", co, "ttft_ms",
+                 "p95")
+            _put(out, f"{pre}.continuous.latency_ms.p95", co,
+                 "latency_ms", "p95")
+            _put(out, f"{pre}.continuous.steps", co, "steps")
+            _put(out, f"{pre}.continuous.decode_tokens", co,
+                 "decode_tokens")
+            _put(out, f"{pre}.continuous.prefill_tokens", co,
+                 "prefill_tokens")
+    elif bench == "train_scaling":
+        for sw in doc.get("sweeps", []):
+            pre = f"train.ways{sw['ways']}"
+            _put(out, f"{pre}.steps_per_s", sw, "steps_per_s")
+            _put(out, f"{pre}.ms_per_step", sw, "ms_per_step")
+    elif bench == "fig3_plan_scaling":
+        for sw in doc.get("sweeps", []):
+            pre = f"plan.{sw['method']}.k{sw['clients']}"
+            _put(out, f"{pre}.plan_seconds", sw, "plan_seconds")
+            _put(out, f"{pre}.plan_bytes", sw, "plan_bytes")
+            _put(out, f"{pre}.nnz", sw, "nnz")
+            _put(out, f"{pre}.steps", sw, "steps")
+            _put(out, f"{pre}.total_samples", sw, "total_samples")
+    else:
+        raise ValueError(f"unknown bench document kind {bench!r}")
+    return out
+
+
+def merge_best(metric_dicts: Iterable[Dict[str, float]]
+               ) -> Dict[str, float]:
+    """Best-of-N merge, direction-aware per metric.
+
+    Higher-better metrics keep their max across runs, lower-better their
+    min, exact metrics their first value — so N noisy regenerations gate
+    like one good one.
+    """
+    merged: Dict[str, float] = {}
+    for m in metric_dicts:
+        for k, v in m.items():
+            if k not in merged:
+                merged[k] = v
+                continue
+            direction, _ = TOLERANCES[tolerance_class(k)]
+            if direction == "higher":
+                merged[k] = max(merged[k], v)
+            elif direction == "lower":
+                merged[k] = min(merged[k], v)
+    return merged
+
+
+def compare(baseline: Dict[str, float], fresh: Dict[str, float],
+            tol_scale: float = 1.0) -> List[dict]:
+    """Per-metric comparison rows over the shared metric names.
+
+    Each row: metric, base, fresh, delta_pct, tol_pct, direction, ok.
+    Raises if the two documents share no metric — an empty intersection
+    must never read as a pass.
+    """
+    shared = sorted(set(baseline) & set(fresh))
+    if not shared:
+        raise ValueError(
+            "baseline and fresh documents share no metrics — wrong "
+            f"bench kind or disjoint sweep cells (baseline has "
+            f"{len(baseline)}, fresh has {len(fresh)})")
+    rows = []
+    for k in shared:
+        base, new = baseline[k], fresh[k]
+        direction, tol = TOLERANCES[tolerance_class(k)]
+        tol *= tol_scale
+        delta = (new - base) / base if base != 0 else (
+            0.0 if new == base else float("inf"))
+        if direction == "higher":
+            ok = new >= base * (1.0 - tol)
+        elif direction == "lower":
+            ok = new <= base * (1.0 + tol)
+        else:
+            ok = abs(new - base) <= 1e-9 * max(1.0, abs(base))
+        rows.append({"metric": k, "base": base, "fresh": new,
+                     "delta_pct": round(100.0 * delta, 2),
+                     "tol_pct": round(100.0 * tol, 2),
+                     "direction": direction, "ok": ok})
+    return rows
+
+
+def format_rows(rows: List[dict]) -> str:
+    w = max(len(r["metric"]) for r in rows)
+    lines = [f"{'metric':<{w}}  {'base':>12}  {'fresh':>12}  "
+             f"{'delta%':>8}  {'tol%':>6}  ok"]
+    for r in rows:
+        lines.append(
+            f"{r['metric']:<{w}}  {r['base']:>12.4g}  "
+            f"{r['fresh']:>12.4g}  {r['delta_pct']:>8.2f}  "
+            f"{r['tol_pct']:>6.1f}  {'OK' if r['ok'] else 'REGRESSED'}")
+    return "\n".join(lines)
+
+
+# gate name → (baseline file, regeneration argv — {out} substituted)
+GATE_BENCHES: Dict[str, Tuple[str, List[str]]] = {
+    "serve": ("BENCH_serve.json",
+              [sys.executable, "benchmarks/serve_throughput.py",
+               "--queued", "8", "--verify", "0", "--out", "{out}"]),
+    "train": ("BENCH_train.json",
+              [sys.executable, "benchmarks/train_scaling.py", "--smoke",
+               "--out", "{out}"]),
+    "plan": ("BENCH_plan.json",
+             [sys.executable, "benchmarks/fig3_sampling_time.py",
+              "--smoke", "--out", "{out}"]),
+}
+
+
+def run_gate(benches: Iterable[str], baseline_dir: pathlib.Path = ROOT,
+             best_of: int = 2, tol_scale: float = 1.0) -> bool:
+    """Regenerate fresh documents and gate them against the baselines.
+
+    Returns True when every shared metric of every requested bench is
+    inside its band. Regeneration failures and empty intersections count
+    as gate failures — the gate never passes by not measuring.
+    """
+    ok = True
+    for name in benches:
+        if name not in GATE_BENCHES:
+            raise SystemExit(f"unknown gate bench {name!r}; "
+                             f"known: {sorted(GATE_BENCHES)}")
+        base_file, argv = GATE_BENCHES[name]
+        base_path = baseline_dir / base_file
+        baseline = extract_metrics(json.loads(base_path.read_text()))
+        runs = []
+        with tempfile.TemporaryDirectory() as td:
+            for i in range(best_of):
+                out = pathlib.Path(td) / f"fresh_{name}_{i}.json"
+                cmd = [a.format(out=out) for a in argv]
+                print(f"[gate:{name}] run {i + 1}/{best_of}: "
+                      f"{' '.join(cmd[1:])}", flush=True)
+                r = subprocess.run(cmd, cwd=ROOT)
+                if r.returncode != 0 or not out.exists():
+                    print(f"[gate:{name}] regeneration FAILED "
+                          f"(rc={r.returncode})", flush=True)
+                    ok = False
+                    break
+                runs.append(extract_metrics(json.loads(out.read_text())))
+        if not runs:
+            continue
+        rows = compare(baseline, merge_best(runs), tol_scale)
+        print(f"\n[gate:{name}] vs {base_path.name} "
+              f"(best-of-{len(runs)}, tol×{tol_scale}):")
+        print(format_rows(rows))
+        bad = [r for r in rows if not r["ok"]]
+        if bad:
+            print(f"[gate:{name}] {len(bad)} metric(s) REGRESSED")
+            ok = False
+        else:
+            print(f"[gate:{name}] all {len(rows)} shared metrics OK")
+    return ok
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--baseline", help="committed BENCH_*.json")
+    ap.add_argument("--fresh", nargs="+",
+                    help="fresh document(s); several merge best-of")
+    ap.add_argument("--gate", default=None,
+                    help="comma-separated benches to regenerate + gate "
+                         f"({','.join(GATE_BENCHES)})")
+    ap.add_argument("--best-of", type=int, default=2,
+                    help="regenerations per gated bench")
+    ap.add_argument("--baseline-dir", default=str(ROOT))
+    ap.add_argument("--tol-scale", type=float, default=1.0,
+                    help="widen every tolerance band by this factor")
+    args = ap.parse_args()
+
+    if args.gate:
+        ok = run_gate([b.strip() for b in args.gate.split(",") if b],
+                      pathlib.Path(args.baseline_dir),
+                      best_of=args.best_of, tol_scale=args.tol_scale)
+        raise SystemExit(0 if ok else 1)
+
+    if not (args.baseline and args.fresh):
+        ap.error("either --gate or both --baseline and --fresh")
+    baseline = extract_metrics(
+        json.loads(pathlib.Path(args.baseline).read_text()))
+    fresh = merge_best(
+        extract_metrics(json.loads(pathlib.Path(f).read_text()))
+        for f in args.fresh)
+    rows = compare(baseline, fresh, args.tol_scale)
+    print(format_rows(rows))
+    bad = [r for r in rows if not r["ok"]]
+    if bad:
+        print(f"{len(bad)} metric(s) REGRESSED")
+        raise SystemExit(1)
+    print(f"all {len(rows)} shared metrics OK")
+
+
+if __name__ == "__main__":
+    main()

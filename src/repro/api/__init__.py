@@ -31,19 +31,20 @@ from repro.api.runner import (build_context, build_data, build_model,
 from repro.api.serving import (ServeContext, build_serve_context,
                                build_workload, restore_params, run_serve,
                                verify_report)
-from repro.api.specs import (AdmissionSpec, ClockSpec, DataSpec,
-                             EngineSpec, EvalSpec, ExecutionSpec,
+from repro.api.specs import (AdmissionSpec, ArrivalSpec, ClockSpec,
+                             DataSpec, EngineSpec, EvalSpec, ExecutionSpec,
                              ExperimentSpec, ModelSpec, ObsSpec,
                              OptimizerSpec, ProtocolSpec, ReportSpec,
                              SamplerSpec, SchedulerSpec, ServeSpec,
-                             SpecError, StragglerSpec, WorkloadSpec)
+                             SpecError, StragglerSpec, TenantSpec,
+                             WorkloadSpec)
 
 __all__ = [
     "ExperimentSpec", "ModelSpec", "OptimizerSpec", "DataSpec",
     "SamplerSpec", "ProtocolSpec", "ExecutionSpec", "EvalSpec",
     "ObsSpec", "StragglerSpec", "SpecError",
     "ServeSpec", "EngineSpec", "AdmissionSpec", "SchedulerSpec",
-    "WorkloadSpec", "ClockSpec", "ReportSpec",
+    "WorkloadSpec", "ClockSpec", "ReportSpec", "TenantSpec", "ArrivalSpec",
     "run", "fit", "build_context", "build_data", "build_model",
     "build_optimizer", "default_callbacks",
     "run_serve", "build_serve_context", "build_workload", "ServeContext",

@@ -45,7 +45,12 @@ def build_workload(spec: ServeSpec, vocab_size: int):
     Per request: a prompt length and output length drawn from the spec's
     menus, then uniform random token ids — one rng stream, so the trace is
     a pure function of the spec. Straggler arrivals (when configured) reuse
-    the training-side delay model.
+    the training-side delay model; ``workload.arrival`` instead draws
+    absolute arrival times from a named process
+    (repro.runtime.workload — poisson/bursty/diurnal/heavy_tail).
+    ``workload.tenant_mix`` assigns each request a tenant by weight. Both
+    extensions use their own seeded rng streams, so traces built without
+    them are byte-identical to what this function always produced.
     """
     from repro.runtime.queue import ServeRequest
     w = spec.workload
@@ -64,6 +69,19 @@ def build_workload(spec: ServeSpec, vocab_size: int):
                                     time_scale=w.time_scale)
         for r, t in zip(reqs, delays):
             r.arrival_s = float(t)
+    elif w.arrival is not None:
+        from repro.runtime.workload import generate_arrivals
+        times = generate_arrivals(w.arrival, w.num_requests)
+        for r, t in zip(reqs, times):
+            r.arrival_s = float(t)
+    if w.tenant_mix is not None:
+        names = sorted(w.tenant_mix)
+        weights = np.asarray([w.tenant_mix[t] for t in names], np.float64)
+        trng = np.random.default_rng([int(w.seed), 0x7e7a])
+        picks = trng.choice(len(names), size=w.num_requests,
+                            p=weights / weights.sum())
+        for r, k in zip(reqs, picks):
+            r.tenant = names[int(k)]
     return reqs
 
 

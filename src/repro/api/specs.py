@@ -65,7 +65,8 @@ class SpecBase:
             elif isinstance(v, dict):
                 v = dict(v)
             elif isinstance(v, list):
-                v = list(v)
+                v = [x.to_dict() if isinstance(x, SpecBase) else x
+                     for x in v]
             out[f.name] = v
         return out
 
@@ -89,6 +90,12 @@ class SpecBase:
             if isinstance(tp, type) and issubclass(tp, SpecBase) \
                     and v is not None:
                 v = tp.from_dict(v)
+            elif typing.get_origin(tp) is list and v is not None:
+                args = typing.get_args(tp)
+                if args and isinstance(args[0], type) \
+                        and issubclass(args[0], SpecBase):
+                    v = [args[0].from_dict(x) if isinstance(x, dict) else x
+                         for x in v]
             kwargs[f.name] = v
         return cls(**kwargs)
 
@@ -383,17 +390,44 @@ class EngineSpec(SpecBase):
 
 
 @dataclasses.dataclass(frozen=True)
+class TenantSpec(SpecBase):
+    """One serving tenant: identity, budget-share weight, priority class.
+
+    ``share`` is a relative weight: every scheduler step the fixed global
+    token budget is apportioned across tenants proportionally to the
+    weights (largest-remainder, so the integer shares sum *exactly* to the
+    budget — the GPSL invariant applied across tenants). ``priority``
+    orders tenants within a step: higher-priority tenants admit first,
+    are preempted last, and win apportionment ties.
+    """
+    name: str = "default"
+    share: float = 1.0
+    priority: int = 0
+
+    def validate(self) -> "TenantSpec":
+        self._require(bool(self.name), "tenant name must be non-empty")
+        self._require(self.share > 0, "share must be positive")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
 class AdmissionSpec(SpecBase):
     """Admission control: the GPSL invariant, served.
 
     ``policy`` selects a registered controller ("budget" holds the per-step
-    decode token budget fixed); ``token_budget`` defaults to the engine's
-    slot count. ``max_admits_per_step`` optionally throttles how many
-    freed-budget grants one scheduler iteration may prefill.
+    decode token budget fixed; "tenant" additionally partitions that budget
+    into per-tenant shares — see :class:`TenantSpec`); ``token_budget``
+    defaults to the engine's slot count. ``max_admits_per_step`` optionally
+    throttles how many freed-budget grants one scheduler iteration may
+    prefill. ``tenants`` declares the tenant population for the "tenant"
+    policy; ``preempt`` lets the scheduler requeue a tenant's over-share
+    requests (they resume token-identically from their emitted prefix).
     """
     policy: str = "budget"
     token_budget: Optional[int] = None
     max_admits_per_step: Optional[int] = None
+    tenants: Optional[List[TenantSpec]] = None
+    preempt: bool = True
 
     def validate(self) -> "AdmissionSpec":
         from repro.api.registry import available_admission_policies
@@ -405,6 +439,18 @@ class AdmissionSpec(SpecBase):
         self._require(self.max_admits_per_step is None
                       or self.max_admits_per_step >= 1,
                       "max_admits_per_step must be >= 1 (or null)")
+        if self.policy == "tenant":
+            self._require(bool(self.tenants),
+                          "the 'tenant' admission policy needs a non-empty "
+                          "tenants list")
+        if self.tenants is not None:
+            self._require(len(self.tenants) >= 1,
+                          "tenants must be non-empty (or null)")
+            names = [t.name for t in self.tenants]
+            self._require(len(set(names)) == len(names),
+                          f"duplicate tenant names: {names}")
+            for t in self.tenants:
+                t.validate()
         return self
 
 
@@ -423,11 +469,53 @@ class SchedulerSpec(SpecBase):
 
 
 @dataclasses.dataclass(frozen=True)
+class ArrivalSpec(SpecBase):
+    """Open-loop arrival process for the request trace.
+
+    Generates the per-request arrival times (seconds, scheduler clock)
+    with one of the traffic shapes million-user serving sees
+    (repro.runtime.workload): "poisson" — memoryless at ``rate_per_s``;
+    "bursty" — on/off bursts of mean size ``burst_size`` whose in-burst
+    rate is ``burst_factor`` × the base rate; "diurnal" — a sinusoidal
+    day/night rate cycle of period ``period_s`` and modulation ``depth``;
+    "heavy_tail" — Pareto(``alpha``) inter-arrivals normalized to the
+    base rate. All are O(n), seeded, and deterministic, so million-request
+    traces replay exactly on a VirtualClock.
+    """
+    process: str = "poisson"
+    rate_per_s: float = 200.0
+    burst_factor: float = 8.0
+    burst_size: float = 16.0
+    period_s: float = 10.0
+    depth: float = 0.8
+    alpha: float = 1.5
+    seed: int = 0
+
+    def validate(self) -> "ArrivalSpec":
+        self._require(self.process in ("poisson", "bursty", "diurnal",
+                                       "heavy_tail"),
+                      f"unknown arrival process {self.process!r}")
+        self._require(self.rate_per_s > 0, "rate_per_s must be positive")
+        self._require(self.burst_factor >= 1.0,
+                      "burst_factor must be >= 1")
+        self._require(self.burst_size >= 1.0, "burst_size must be >= 1")
+        self._require(self.period_s > 0, "period_s must be positive")
+        self._require(0.0 <= self.depth < 1.0, "depth must be in [0, 1)")
+        self._require(self.alpha > 1.0,
+                      "alpha must be > 1 (finite-mean Pareto)")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
 class WorkloadSpec(SpecBase):
     """The synthetic request trace: sizes drawn per request from the
     ``prompt_lens`` × ``max_new_tokens`` menus (seeded), with optional
     straggler arrival delays (``arrivals`` reuses the training-side
-    StragglerSpec; ``time_scale`` converts its ms into scheduler seconds).
+    StragglerSpec; ``time_scale`` converts its ms into scheduler seconds),
+    an optional open-loop ``arrival`` process (:class:`ArrivalSpec` —
+    bursty/diurnal/heavy-tail traffic), and an optional ``tenant_mix``
+    mapping tenant name → traffic weight that tags each request with a
+    tenant identity (seeded draw; weights need not be normalized).
     """
     num_requests: int = 8
     prompt_lens: List[int] = dataclasses.field(
@@ -437,6 +525,8 @@ class WorkloadSpec(SpecBase):
     seed: int = 0
     arrivals: Optional[StragglerSpec] = None
     time_scale: float = 1e-3
+    arrival: Optional[ArrivalSpec] = None
+    tenant_mix: Optional[Dict[str, float]] = None
 
     def validate(self) -> "WorkloadSpec":
         self._require(self.num_requests > 0, "num_requests must be positive")
@@ -448,8 +538,19 @@ class WorkloadSpec(SpecBase):
                       "max_new_tokens must be a non-empty list of "
                       "lengths >= 1")
         self._require(self.time_scale > 0, "time_scale must be positive")
+        self._require(not (self.arrivals is not None
+                           and self.arrival is not None),
+                      "set either straggler `arrivals` or an `arrival` "
+                      "process, not both")
         if self.arrivals is not None:
             self.arrivals.validate()
+        if self.arrival is not None:
+            self.arrival.validate()
+        if self.tenant_mix is not None:
+            self._require(bool(self.tenant_mix),
+                          "tenant_mix must be non-empty (or null)")
+            self._require(all(w > 0 for w in self.tenant_mix.values()),
+                          "tenant_mix weights must be positive")
         return self
 
 
@@ -542,12 +643,23 @@ class ServeSpec(SpecBase):
                 + max(self.workload.max_new_tokens),
                 "slot_len too small for the workload's max prompt + max "
                 "new tokens")
+        if self.workload.tenant_mix is not None \
+                and self.admission.tenants is not None:
+            known = {t.name for t in self.admission.tenants}
+            stray = set(self.workload.tenant_mix) - known
+            self._require(not stray,
+                          f"tenant_mix names {sorted(stray)} not declared "
+                          f"in admission.tenants {sorted(known)}")
         if self.engine.name == "static":
             self._require(self.report.verify == 0,
                           "verify requires the continuous engine "
                           "(left-padded static batches are not "
                           "token-identical; docs/serving.md)")
-            self._require(self.workload.arrivals is None,
+            self._require(self.workload.arrivals is None
+                          and self.workload.arrival is None,
                           "the static engine assembles its batch up front "
-                          "and cannot honor straggler arrivals")
+                          "and cannot honor arrival traces")
+            self._require(self.admission.tenants is None,
+                          "the static engine has no per-request admission "
+                          "and cannot serve multi-tenant shares")
         return self

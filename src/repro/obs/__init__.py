@@ -21,7 +21,7 @@ The training loop (:func:`repro.api.loop.fit`) and the serving runtime
 it on per run, and ``tools/trace_report.py`` summarizes the artifacts.
 """
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
-                               P2Quantile, percentiles)
+                               P2Quantile, group_percentiles, percentiles)
 from repro.obs.monitor import (GPSLMonitor, MonitorSummary,
                                monitor_from_spec)
 from repro.obs.trace import (NullTracer, Tracer, maybe_jax_profiler,
@@ -30,7 +30,7 @@ from repro.obs.trace import (NullTracer, Tracer, maybe_jax_profiler,
 __all__ = [
     "Tracer", "NullTracer", "null_tracer", "tracer_from_spec",
     "write_outputs", "maybe_jax_profiler",
-    "percentiles", "P2Quantile", "Counter", "Gauge", "Histogram",
+    "percentiles", "group_percentiles", "P2Quantile", "Counter", "Gauge", "Histogram",
     "MetricsRegistry",
     "GPSLMonitor", "MonitorSummary", "monitor_from_spec",
 ]

@@ -38,6 +38,22 @@ def percentiles(xs: Iterable[float]) -> Dict[str, float]:
             "p99": float(np.percentile(a, 99)), "max": float(a.max())}
 
 
+def group_percentiles(rows: Iterable[Dict], key: str,
+                      fields: Iterable[str]) -> Dict[str, Dict[str, Dict]]:
+    """Per-group :func:`percentiles` summaries of report-style rows.
+
+    Groups ``rows`` (dicts) by ``row[key]`` (missing key → ``"default"``)
+    and summarizes each of ``fields`` within each group — the helper
+    behind ``ServeReport``'s per-tenant p50/p95/p99 TTFT/latency blocks.
+    Group order in the result is sorted for deterministic JSON.
+    """
+    groups: Dict[str, List[Dict]] = {}
+    for r in rows:
+        groups.setdefault(str(r.get(key, "default")), []).append(r)
+    return {g: {f: percentiles([r[f] for r in rs]) for f in fields}
+            for g, rs in sorted(groups.items())}
+
+
 class P2Quantile:
     """Streaming quantile estimate via the P² algorithm (O(1) memory).
 

@@ -18,12 +18,19 @@ from repro.runtime.engine import (ContinuousEngine, ServeReport,
                                   reference_generate)
 from repro.runtime.kvcache import KVCachePool
 from repro.runtime.queue import (AdmissionController, RequestQueue,
-                                 ServeRequest)
+                                 ServeRequest, TenantAdmissionController,
+                                 apportion)
 from repro.runtime.scheduler import (Scheduler, VirtualClock, WallClock,
                                      make_clock, straggler_arrivals)
 from repro.runtime.static import BatchedServer, Request
+from repro.runtime.workload import (bursty_arrivals, diurnal_arrivals,
+                                    generate_arrivals, heavy_tail_arrivals,
+                                    poisson_arrivals)
 
 __all__ = ["AdmissionController", "BatchedServer", "ContinuousEngine",
            "KVCachePool", "Request", "RequestQueue", "Scheduler",
-           "ServeReport", "ServeRequest", "VirtualClock", "WallClock",
-           "make_clock", "reference_generate", "straggler_arrivals"]
+           "ServeReport", "ServeRequest", "TenantAdmissionController",
+           "VirtualClock", "WallClock", "apportion", "bursty_arrivals",
+           "diurnal_arrivals", "generate_arrivals", "heavy_tail_arrivals",
+           "make_clock", "poisson_arrivals", "reference_generate",
+           "straggler_arrivals"]

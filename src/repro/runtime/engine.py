@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.api.registry import register_engine
 from repro.models import build_model
-from repro.obs.metrics import percentiles
+from repro.obs.metrics import group_percentiles, percentiles
 from repro.runtime.kvcache import KVCachePool
 from repro.runtime.queue import ServeRequest
 
@@ -56,13 +56,22 @@ def request_rows(records: Dict[int, Dict[str, Any]]) -> List[Dict[str, Any]]:
             "arrival_s": round(r["arrival_s"], 6),
             "ttft_ms": (r["first_token_s"] - r["arrival_s"]) * 1e3,
             "latency_ms": (r["done_s"] - r["arrival_s"]) * 1e3,
+            "tenant": r.get("tenant", "default"),
+            "preemptions": r.get("preemptions", 0),
             "tokens": r["tokens"]})
     return rows
 
 
 @dataclasses.dataclass
 class ServeReport:
-    """Per-request latency/TTFT plus aggregate throughput for one run."""
+    """Per-request latency/TTFT plus aggregate throughput for one run.
+
+    The aggregate percentile blocks (``ttft_ms``/``latency_ms``) mix every
+    tenant into one population, which is the single-tenant view old
+    consumers expect; multi-tenant runs additionally get a ``per_tenant``
+    block (p50/p95/p99 TTFT/latency per tenant plus request/preemption
+    counts) and the total ``preemptions`` counter.
+    """
     engine: str
     arch: str
     wall_s: float
@@ -79,6 +88,8 @@ class ServeReport:
     # (no per-request admission exists there) — flagged so consumers don't
     # read its ttft percentiles as a distribution.
     ttft_shared: bool = False
+    preemptions: int = 0
+    tenant_shares: Optional[Dict[str, int]] = None  # last computed shares
 
     @property
     def requests_per_s(self) -> float:
@@ -87,6 +98,18 @@ class ServeReport:
     @property
     def decode_tok_per_s(self) -> float:
         return self.decode_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    def tenant_summary(self) -> Dict[str, Dict[str, Any]]:
+        """Per-tenant p50/p95/p99 TTFT/latency + request/preempt counts."""
+        out = group_percentiles(self.per_request, "tenant",
+                                ("ttft_ms", "latency_ms"))
+        for tenant, block in out.items():
+            rows = [r for r in self.per_request
+                    if r.get("tenant", "default") == tenant]
+            block["num_requests"] = len(rows)
+            block["preemptions"] = sum(r.get("preemptions", 0)
+                                       for r in rows)
+        return out
 
     def to_json(self) -> Dict[str, Any]:
         ttft = percentiles([r["ttft_ms"] for r in self.per_request])
@@ -103,7 +126,11 @@ class ServeReport:
                 "decode_tok_per_s": round(self.decode_tok_per_s, 2),
                 "ttft_ms": ttft, "ttft_shared": self.ttft_shared,
                 "latency_ms": lat,
+                "preemptions": self.preemptions,
+                "per_tenant": self.tenant_summary(),
                 "per_request": self.per_request}
+        if self.tenant_shares is not None:
+            out["tenant_shares"] = self.tenant_shares
         if self.verified is not None:
             out["verified"] = self.verified
         return out
@@ -211,6 +238,22 @@ class ContinuousEngine:
     def has_capacity(self) -> bool:
         return self.pool.num_free > 0
 
+    def active_requests(self) -> List[Dict[str, Any]]:
+        """Live (slot-holding) requests: rid, tenant, emitted count.
+
+        The scheduler's tenant bookkeeping and preemption-victim choice
+        read this instead of poking slot arrays, so alternative engines
+        (and test stubs) only need to mirror this surface.
+        """
+        out = []
+        for slot in np.flatnonzero(self._rid >= 0):
+            rid = int(self._rid[slot])
+            rec = self.records[rid]
+            out.append({"rid": rid,
+                        "tenant": rec.get("tenant", "default"),
+                        "emitted": len(rec["tokens"])})
+        return out
+
     # ----- admission (prefill) -----
     def admit(self, req: ServeRequest, now) -> None:
         self.admit_batch([req], now)
@@ -254,12 +297,23 @@ class ContinuousEngine:
         self.prefill_tokens += plen * len(chunk)
         for row, req in enumerate(chunk):
             first = int(firsts[row])
-            rec = {"rid": req.rid, "prompt_len": plen,
-                   "max_new_tokens": req.max_new_tokens,
-                   "arrival_s": req.arrival_s, "admit_start_s": t_start,
-                   "admit_s": t, "first_token_s": t, "done_s": None,
-                   "tokens": [first]}
-            self.records[req.rid] = rec
+            rec = self.records.get(req.rid)
+            if rec is not None and rec.pop("resume_pending", False):
+                # Preempted request resuming: its prompt is the original
+                # prompt + everything already emitted, so this prefill's
+                # last-position argmax is exactly the token an
+                # uninterrupted decode would have produced next. Append
+                # to the original record — arrival/TTFT stamps stay.
+                rec["tokens"].append(first)
+            else:
+                rec = {"rid": req.rid, "prompt_len": plen,
+                       "max_new_tokens": req.max_new_tokens,
+                       "arrival_s": req.arrival_s,
+                       "admit_start_s": t_start,
+                       "admit_s": t, "first_token_s": t, "done_s": None,
+                       "tenant": req.tenant, "preemptions": 0,
+                       "tokens": [first]}
+                self.records[req.rid] = rec
             if req.max_new_tokens == 1:
                 rec["done_s"] = t
                 continue
@@ -270,6 +324,31 @@ class ContinuousEngine:
             self._rid[slot] = req.rid
             self._tok[slot] = first
             self._remaining[slot] = req.max_new_tokens - 1
+
+    def preempt(self, rid: int) -> Dict[str, Any]:
+        """Evict an in-flight request: free its KV slot, keep its record.
+
+        The slot returns to the pool immediately (its cache needs no
+        scrubbing — insertion overwrites). The record is flagged
+        ``resume_pending`` so the next admission of this rid *appends* to
+        the emitted tokens instead of restarting the lifecycle. Greedy
+        decoding is a pure function of the context, so re-prefilling
+        prompt + emitted-prefix resumes token-identically to an
+        uninterrupted decode (pinned in tests/test_multitenant.py).
+        Returns the record (the scheduler reads ``tokens`` to build the
+        resume request).
+        """
+        slots = np.flatnonzero(self._rid == rid)
+        if slots.size == 0:
+            raise ValueError(f"request {rid} is not actively decoding")
+        slot = int(slots[0])
+        self._rid[slot] = -1
+        self._remaining[slot] = 0
+        self.pool.release(slot)
+        rec = self.records[rid]
+        rec["preemptions"] = rec.get("preemptions", 0) + 1
+        rec["resume_pending"] = True
+        return rec
 
     def warm(self, prompt_lens) -> None:
         """Pre-compile every reachable (group size, prompt length) admission
@@ -320,7 +399,9 @@ class ContinuousEngine:
     # ----- reporting -----
     def build_report(self, engine_name: str, wall_s: float,
                      token_budget: Optional[int],
-                     step_active: List[int]) -> ServeReport:
+                     step_active: List[int],
+                     tenant_shares: Optional[Dict[str, int]] = None
+                     ) -> ServeReport:
         per_request = request_rows(self.records)
         return ServeReport(
             engine=engine_name, arch=self.cfg.name, wall_s=wall_s,
@@ -329,7 +410,10 @@ class ContinuousEngine:
             decode_tokens=self.decode_tokens, steps=self.steps,
             token_budget=token_budget,
             max_active=max(step_active, default=0),
-            step_active=step_active, per_request=per_request)
+            step_active=step_active, per_request=per_request,
+            preemptions=sum(r.get("preemptions", 0)
+                            for r in self.records.values()),
+            tenant_shares=tenant_shares)
 
 
 @functools.lru_cache(maxsize=32)

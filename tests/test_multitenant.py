@@ -1,0 +1,370 @@
+"""Multi-tenant serving: share arithmetic, preemption, determinism.
+
+Four claims (docs/serving.md, "Multi-tenant serving"):
+
+* **shares partition the budget** — whatever the weights, priorities,
+  and demand, the per-step tenant shares are non-negative integers that
+  sum *exactly* to the global token budget (the GPSL invariant across
+  tenants), and a tenant exceeds its demand only when every other
+  tenant's demand is already met (work-conserving);
+* **preemption is invisible in the tokens** — an evicted request resumes
+  from its emitted prefix and finishes with exactly the token sequence
+  an uninterrupted single-request decode produces, and its KV slot goes
+  back to the pool (no leaks across preempt/requeue);
+* **the budget is never overshot** — every audited decode step has
+  active ≤ budget, and with preemption on, active ≤ share per tenant;
+* **runs are deterministic** — the same multi-tenant ServeSpec on a
+  VirtualClock yields byte-identical event logs and equal reports,
+  preemptions included.
+
+Property tests use `hypothesis` when available (tests/optional_deps.py);
+the same invariants also run under seeded random sweeps so a clean
+environment still exercises them.
+"""
+import json
+import sys
+import pathlib
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+from optional_deps import given, settings, st  # noqa: E402
+
+from repro import api  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.runtime import (ContinuousEngine, Scheduler, ServeRequest,  # noqa: E402
+                           TenantAdmissionController, VirtualClock,
+                           apportion, generate_arrivals,
+                           reference_generate)
+
+SLOT_LEN = 48
+
+
+# ---------------------------------------------------------------------------
+# share arithmetic (pure, no engine)
+# ---------------------------------------------------------------------------
+
+def _tenants(*specs):
+    return [api.TenantSpec(name=n, share=w, priority=p)
+            for n, w, p in specs]
+
+
+def _check_shares(budget, weights, priorities, demand):
+    adm = TenantAdmissionController(
+        budget, _tenants(*[(t, weights[t], priorities.get(t, 0))
+                           for t in weights]))
+    shares = adm.step_shares(demand)
+    assert sum(shares.values()) == budget
+    assert all(v >= 0 for v in shares.values())
+    # work-conserving: surplus beyond a tenant's demand exists only once
+    # every tenant's demand is satisfied
+    if any(shares[t] > demand.get(t, 0) for t in shares):
+        starved = [t for t in shares if shares[t] < demand.get(t, 0)]
+        assert not starved, (shares, demand)
+    return shares
+
+
+def test_apportion_sums_exactly_and_is_deterministic():
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        n = int(rng.integers(1, 8))
+        total = int(rng.integers(0, 200))
+        weights = {f"t{i}": float(rng.uniform(0.1, 10)) for i in range(n)}
+        prios = {f"t{i}": int(rng.integers(-2, 3)) for i in range(n)}
+        s = apportion(total, weights, prios)
+        assert sum(s.values()) == total
+        assert all(v >= 0 for v in s.values())
+        assert s == apportion(total, weights, prios)
+
+
+def test_apportion_equal_weights_spread_within_one():
+    s = apportion(10, {"a": 1, "b": 1, "c": 1})
+    assert sum(s.values()) == 10
+    assert max(s.values()) - min(s.values()) <= 1
+
+
+def test_apportion_rejects_bad_input():
+    with pytest.raises(ValueError):
+        apportion(-1, {"a": 1})
+    with pytest.raises(ValueError):
+        apportion(5, {"a": 0.0})
+    assert apportion(5, {}) == {}
+
+
+def test_step_shares_invariants_random_sweep():
+    """Seeded sweep: shares always partition the budget exactly and are
+    work-conserving, for any weights/priorities/demand pattern."""
+    rng = np.random.default_rng(1)
+    for _ in range(300):
+        n = int(rng.integers(1, 6))
+        budget = int(rng.integers(1, 64))
+        weights = {f"t{i}": float(rng.uniform(0.1, 5)) for i in range(n)}
+        prios = {f"t{i}": int(rng.integers(0, 3)) for i in range(n)}
+        demand = {f"t{i}": int(rng.integers(0, 20)) for i in range(n)}
+        shares = _check_shares(budget, weights, prios, demand)
+        # with demand ≥ budget, nobody is handed more than they asked for
+        if sum(demand.values()) >= budget:
+            assert all(shares[t] <= demand[t] for t in shares), \
+                (shares, demand)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=1, max_value=128),
+       st.lists(st.tuples(st.floats(min_value=0.1, max_value=10.0,
+                                    allow_nan=False),
+                          st.integers(min_value=-2, max_value=2),
+                          st.integers(min_value=0, max_value=30)),
+                min_size=1, max_size=6))
+def test_step_shares_partition_property(budget, tenant_rows):
+    """Property: ∀ budget/weights/priorities/demand — shares are a
+    non-negative integer partition of the budget, work-conserving."""
+    weights = {f"t{i}": w for i, (w, _, _) in enumerate(tenant_rows)}
+    prios = {f"t{i}": p for i, (_, p, _) in enumerate(tenant_rows)}
+    demand = {f"t{i}": d for i, (_, _, d) in enumerate(tenant_rows)}
+    _check_shares(budget, weights, prios, demand)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(min_value=0, max_value=500),
+       st.lists(st.floats(min_value=0.05, max_value=20.0,
+                          allow_nan=False), min_size=1, max_size=8))
+def test_apportion_partition_property(total, weight_list):
+    """Property: apportionment always sums exactly to the total."""
+    weights = {f"t{i}": w for i, w in enumerate(weight_list)}
+    s = apportion(total, weights)
+    assert sum(s.values()) == total
+    assert all(v >= 0 for v in s.values())
+
+
+def test_tenant_controller_validation():
+    with pytest.raises(ValueError, match="at least"):
+        TenantAdmissionController(4, [])
+    with pytest.raises(ValueError, match="duplicate"):
+        TenantAdmissionController(4, _tenants(("a", 1, 0), ("a", 2, 0)))
+    adm = TenantAdmissionController(4, _tenants(("a", 1, 0)))
+    with pytest.raises(ValueError, match="undeclared"):
+        adm.step_shares({"ghost": 1})
+
+
+def test_note_tenant_step_audits_share_overshoot():
+    adm = TenantAdmissionController(
+        4, _tenants(("a", 1, 0), ("b", 1, 0)), preempt=True)
+    shares = adm.step_shares({"a": 4, "b": 4})
+    adm.note_tenant_step({"a": 2, "b": 2}, shares)     # at share: fine
+    with pytest.raises(RuntimeError, match="share invariant"):
+        adm.note_tenant_step({"a": 3, "b": 1}, shares)
+    # with preemption off, overshoot drains naturally — recorded only
+    soft = TenantAdmissionController(
+        4, _tenants(("a", 1, 0), ("b", 1, 0)), preempt=False)
+    soft.note_tenant_step({"a": 4, "b": 0}, soft.step_shares({"a": 9}))
+    assert len(soft.share_history) == 1
+
+
+# ---------------------------------------------------------------------------
+# arrival generators
+# ---------------------------------------------------------------------------
+
+def test_arrival_generators_sorted_seeded_rate():
+    for proc in ("poisson", "bursty", "diurnal", "heavy_tail"):
+        s = api.ArrivalSpec(process=proc, rate_per_s=100.0, seed=5)
+        t = generate_arrivals(s, 4000)
+        assert t.shape == (4000,)
+        assert np.all(np.diff(t) >= 0) and t[0] >= 0
+        assert np.array_equal(t, generate_arrivals(s, 4000))
+        # long-run rate within 15% of nominal for every process
+        assert 4000 / t[-1] == pytest.approx(100.0, rel=0.15)
+    with pytest.raises(ValueError, match="process"):
+        generate_arrivals(api.ArrivalSpec(process="lunar"), 4)
+
+
+# ---------------------------------------------------------------------------
+# engine-level: preemption, token identity, pool hygiene
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("granite-3-2b", reduced=True)
+    engine = ContinuousEngine(cfg, num_slots=4, slot_len=SLOT_LEN, seed=0)
+    return cfg, engine
+
+
+def _two_tier_trace(cfg, rng, n_free=4, n_gold=4):
+    """Free-tier requests arrive first and fill the pool; a gold burst
+    lands one tick later, forcing preemption of free's borrowed share."""
+    reqs, rid = [], 0
+    for tenant, n, t0 in (("free", n_free, 0.0), ("gold", n_gold, 0.005)):
+        for _ in range(n):
+            plen = int(rng.integers(4, 12))
+            reqs.append(ServeRequest(
+                rid=rid, prompt=rng.integers(0, cfg.vocab_size,
+                                             plen).astype(np.int32),
+                max_new_tokens=int(rng.integers(6, 14)),
+                arrival_s=t0, tenant=tenant))
+            rid += 1
+    return reqs
+
+
+GOLD_FREE = [("gold", 3.0, 1), ("free", 1.0, 0)]
+
+
+def test_preempted_requests_resume_token_identical(served):
+    cfg, engine = served
+    engine.reset()
+    rng = np.random.default_rng(0)
+    reqs = _two_tier_trace(cfg, rng)
+    sched = Scheduler(engine, token_budget=4, clock=VirtualClock(),
+                      admission="tenant", tenants=_tenants(*GOLD_FREE))
+    report = sched.run(reqs)
+    assert report.preemptions > 0, "trace was built to force preemption"
+    assert report.num_requests == len(reqs)
+    for req in reqs:
+        want = reference_generate(engine.model, engine.params, req.prompt,
+                                  req.max_new_tokens, SLOT_LEN)
+        got = engine.records[req.rid]["tokens"]
+        assert got == want, f"request {req.rid} diverged after preemption"
+        assert len(got) == req.max_new_tokens
+    # preemption counters surface per tenant and in the aggregate
+    assert sum(sched.admission.preemptions.values()) == report.preemptions
+    per_tenant = report.tenant_summary()
+    assert set(per_tenant) == {"gold", "free"}
+    assert per_tenant["free"]["preemptions"] > 0
+    assert per_tenant["gold"]["num_requests"] == 4
+
+
+def test_no_kv_leaks_and_budget_never_overshot(served):
+    cfg, engine = served
+    engine.reset()
+    rng = np.random.default_rng(7)
+    reqs = _two_tier_trace(cfg, rng, n_free=5, n_gold=5)
+    sched = Scheduler(engine, token_budget=3, clock=VirtualClock(),
+                      admission="tenant", tenants=_tenants(*GOLD_FREE))
+    report = sched.run(reqs)
+    engine.pool.check_no_leaks()          # every slot released
+    adm = sched.admission
+    assert adm.step_active, "no decode steps audited"
+    assert max(adm.step_active) <= adm.token_budget
+    assert report.max_active <= adm.token_budget
+    # every audited share vector partitions the budget exactly
+    assert adm.share_history
+    for shares in adm.share_history:
+        assert sum(shares.values()) == adm.token_budget
+
+
+def test_work_conserving_single_tenant_uses_full_budget(served):
+    """A lone tenant with deep demand gets the whole budget — shares
+    never idle capacity that someone wants (work conservation)."""
+    cfg, engine = served
+    engine.reset()
+    rng = np.random.default_rng(2)
+    reqs = [ServeRequest(rid=i,
+                         prompt=rng.integers(0, cfg.vocab_size,
+                                             8).astype(np.int32),
+                         max_new_tokens=8, tenant="free")
+            for i in range(8)]
+    sched = Scheduler(engine, token_budget=4, clock=VirtualClock(),
+                      admission="tenant", tenants=_tenants(*GOLD_FREE))
+    report = sched.run(reqs)
+    assert report.max_active == 4          # free borrowed gold's share
+    assert report.preemptions == 0         # nobody showed up to claim it
+    engine.pool.check_no_leaks()
+
+
+def test_undeclared_tenant_is_rejected_at_submit(served):
+    cfg, engine = served
+    engine.reset()
+    sched = Scheduler(engine, token_budget=4, clock=VirtualClock(),
+                      admission="tenant", tenants=_tenants(*GOLD_FREE))
+    bad = ServeRequest(rid=0, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=2, tenant="ghost")
+    with pytest.raises(ValueError, match="ghost"):
+        sched.submit([bad])
+
+
+# ---------------------------------------------------------------------------
+# spec-driven determinism: byte-identical traces, equal reports
+# ---------------------------------------------------------------------------
+
+def _mt_spec(**over):
+    d = {
+        "model": {"arch": "granite-3-2b", "reduced": True},
+        "engine": {"name": "continuous", "num_slots": 4, "slot_len": 24},
+        "admission": {"policy": "tenant", "token_budget": 4,
+                      "tenants": [
+                          {"name": "gold", "share": 3.0, "priority": 2},
+                          {"name": "silver", "share": 2.0, "priority": 1},
+                          {"name": "free", "share": 1.0, "priority": 0}],
+                      "preempt": True},
+        "clock": {"kind": "virtual"},
+        "workload": {"num_requests": 24, "seed": 0,
+                     "prompt_lens": [4, 8], "max_new_tokens": [2, 6, 10],
+                     "arrival": {"process": "bursty", "rate_per_s": 100.0,
+                                 "seed": 0},
+                     "tenant_mix": {"gold": 0.25, "silver": 0.25,
+                                    "free": 0.5}},
+        "report": {"verify": -1, "per_request": True},
+    }
+    d.update(over)
+    return api.ServeSpec.from_dict(d)
+
+
+def _stable_json(report):
+    import copy
+    j = copy.deepcopy(report.to_json())   # rows are shared, don't mutate
+    for k in ("wall_s", "requests_per_s", "decode_tok_per_s"):
+        j.pop(k, None)                     # wall-clock noise
+    for r in j["per_request"]:
+        for k in list(r):
+            if k.endswith("_ms") or k.endswith("_s"):
+                r.pop(k)
+    return j
+
+
+@pytest.mark.slow
+def test_multitenant_serving_is_deterministic(tmp_path):
+    """Same multi-tenant spec, two runs: byte-identical event logs,
+    equal reports (modulo wall time), preemption active, and every
+    request — including preempted-resumed ones — verified token-identical
+    to single-request decode by the spec's own verify pass."""
+    e1, e2 = tmp_path / "e1.jsonl", tmp_path / "e2.jsonl"
+    t1, t2 = tmp_path / "t1.json", tmp_path / "t2.json"
+    r1 = api.run_serve(_mt_spec(obs={"enabled": True,
+                                     "events_path": str(e1),
+                                     "trace_path": str(t1)}))
+    r2 = api.run_serve(_mt_spec(obs={"enabled": True,
+                                     "events_path": str(e2),
+                                     "trace_path": str(t2)}))
+    assert r1.preemptions > 0, "spec was tuned to force preemption"
+    # the virtual-clock trace is a pure function of the spec
+    assert t1.read_bytes() == t2.read_bytes()
+    # the event log too, apart from the wall-clock serve_report record
+    def _sim_lines(p):
+        return [line for line in p.read_text().splitlines()
+                if '"kind": "serve_report"' not in line]
+    assert _sim_lines(e1) == _sim_lines(e2)
+    assert _stable_json(r1) == _stable_json(r2)
+    # verify=-1 already replayed every request through reference_generate
+    assert r1.verified == {"checked": 24, "mismatches": []}
+    assert r1.tenant_shares is not None
+    assert sum(r1.tenant_shares.values()) == 4
+    per_tenant = r1.tenant_summary()
+    assert set(per_tenant) == {"gold", "silver", "free"}
+    for t, s in per_tenant.items():
+        for field in ("ttft_ms", "latency_ms"):
+            assert set(s[field]) == {"mean", "p50", "p95", "p99", "max"}
+    # the event log carries per-tenant preemption counters
+    events = [json.loads(line) for line in e1.read_text().splitlines()]
+    names = {e.get("name") for e in events}
+    assert any(str(n).startswith("preemptions.") for n in names)
+
+
+def test_spec_validation_guards_tenant_fields():
+    with pytest.raises(api.SpecError, match="tenants"):
+        _mt_spec(admission={"policy": "tenant", "token_budget": 4}) \
+            .validate()
+    bad_mix = _mt_spec()
+    bad = api.ServeSpec.from_dict({**bad_mix.to_dict(),
+                                   "workload": {**bad_mix.to_dict()["workload"],
+                                                "tenant_mix": {"ghost": 1.0}}})
+    with pytest.raises(api.SpecError, match="ghost"):
+        bad.validate()

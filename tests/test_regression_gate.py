@@ -1,0 +1,173 @@
+"""The perf-regression gate gates (benchmarks/regression.py).
+
+Synthetic BENCH-style documents prove the machinery end to end, engine-
+free: extraction flattens every committed document kind into tolerance-
+classed metrics; an identical fresh document passes; noise inside the
+band passes; the canonical injected regression — 20% throughput drop —
+fails (the throughput band is 15% by construction); exact-count metrics
+fail on any drift; best-of-N merging is direction-aware; and disjoint
+documents raise instead of silently passing.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks.regression import (TOLERANCES, compare, extract_metrics,  # noqa: E402
+                                   format_rows, merge_best,
+                                   tolerance_class)
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def serve_doc(rps=300.0, tps=2000.0, steps=15, ttft_p95=9.5):
+    return {"bench": "serve_throughput",
+            "scenarios": [{"queued": 8, "budget": 8,
+                           "static": {"requests_per_s": 195.4,
+                                      "decode_tok_per_s": 1465.4},
+                           "continuous": {"requests_per_s": rps,
+                                          "decode_tok_per_s": tps,
+                                          "steps": steps,
+                                          "decode_tokens": 52,
+                                          "prefill_tokens": 224,
+                                          "ttft_ms": {"p95": ttft_p95},
+                                          "latency_ms": {"p95": 24.5}}}]}
+
+
+def train_doc(sps=3.2):
+    return {"bench": "train_scaling",
+            "sweeps": [{"ways": 1, "steps_per_s": sps,
+                        "ms_per_step": 1000.0 / sps}]}
+
+
+def plan_doc(secs=0.8, nnz=226419):
+    return {"bench": "fig3_plan_scaling",
+            "sweeps": [{"method": "ugs", "clients": 65536,
+                        "plan_seconds": secs, "plan_bytes": 1813152,
+                        "nnz": nnz, "steps": 224,
+                        "total_samples": 229140}]}
+
+
+def test_extraction_covers_all_three_document_kinds():
+    s = extract_metrics(serve_doc())
+    assert s["serve.q8.b8.continuous.requests_per_s"] == 300.0
+    assert s["serve.q8.b8.continuous.ttft_ms.p95"] == 9.5
+    t = extract_metrics(train_doc())
+    assert t["train.ways1.steps_per_s"] == 3.2
+    p = extract_metrics(plan_doc())
+    assert p["plan.ugs.k65536.plan_bytes"] == 1813152
+    # every emitted metric has a tolerance class
+    for name in list(s) + list(t) + list(p):
+        assert tolerance_class(name) in TOLERANCES
+    with pytest.raises(ValueError, match="unknown bench"):
+        extract_metrics({"bench": "mystery"})
+
+
+def test_identical_documents_pass():
+    base = extract_metrics(serve_doc())
+    rows = compare(base, dict(base))
+    assert all(r["ok"] for r in rows)
+    assert len(rows) == len(base)
+
+
+def test_noise_within_band_passes():
+    base = extract_metrics(serve_doc())
+    fresh = extract_metrics(serve_doc(rps=300.0 * 0.90,   # -10% < 15% band
+                                      tps=2000.0 * 1.05,
+                                      ttft_p95=9.5 * 1.30))
+    assert all(r["ok"] for r in compare(base, fresh))
+
+
+def test_injected_20pct_throughput_regression_fails():
+    """The acceptance scenario: a 20% requests/s drop must trip the gate
+    (throughput band is 15%), and the report names the metric with its
+    delta."""
+    base = extract_metrics(serve_doc())
+    fresh = extract_metrics(serve_doc(rps=300.0 * 0.80))
+    rows = compare(base, fresh)
+    bad = [r for r in rows if not r["ok"]]
+    assert [r["metric"] for r in bad] == \
+        ["serve.q8.b8.continuous.requests_per_s"]
+    assert bad[0]["delta_pct"] == pytest.approx(-20.0)
+    assert bad[0]["tol_pct"] == pytest.approx(15.0)
+    assert "REGRESSED" in format_rows(rows)
+    # the same drop passes when the operator widens the bands 2x
+    assert all(r["ok"] for r in compare(base, fresh, tol_scale=2.0))
+
+
+def test_exact_count_metrics_tolerate_nothing():
+    base = extract_metrics(plan_doc())
+    fresh = extract_metrics(plan_doc(nnz=226420))          # off by one
+    bad = [r for r in compare(base, fresh) if not r["ok"]]
+    assert [r["metric"] for r in bad] == ["plan.ugs.k65536.nnz"]
+    # time drift inside the wide band is fine
+    ok = compare(base, extract_metrics(plan_doc(secs=0.8 * 1.4)))
+    assert all(r["ok"] for r in ok)
+
+
+def test_time_regression_beyond_band_fails():
+    base = extract_metrics(train_doc())
+    fresh = extract_metrics(train_doc(sps=3.2 / 1.6))  # ms/step +60%
+    bad = {r["metric"] for r in compare(base, fresh) if not r["ok"]}
+    assert "train.ways1.ms_per_step" in bad
+
+
+def test_merge_best_is_direction_aware():
+    a = {"serve.q8.b8.continuous.requests_per_s": 280.0,
+         "serve.q8.b8.continuous.ttft_ms.p95": 12.0,
+         "serve.q8.b8.continuous.steps": 15.0}
+    b = {"serve.q8.b8.continuous.requests_per_s": 310.0,
+         "serve.q8.b8.continuous.ttft_ms.p95": 9.0,
+         "serve.q8.b8.continuous.steps": 15.0}
+    m = merge_best([a, b])
+    assert m["serve.q8.b8.continuous.requests_per_s"] == 310.0  # max
+    assert m["serve.q8.b8.continuous.ttft_ms.p95"] == 9.0       # min
+    assert m["serve.q8.b8.continuous.steps"] == 15.0
+
+
+def test_disjoint_documents_raise_instead_of_passing():
+    with pytest.raises(ValueError, match="share no metrics"):
+        compare(extract_metrics(serve_doc()),
+                extract_metrics(train_doc()))
+
+
+def test_cli_exit_codes(tmp_path):
+    """`regression.py --baseline X --fresh Y` exits 0 in band, 1 out."""
+    base = tmp_path / "base.json"
+    good = tmp_path / "good.json"
+    bad = tmp_path / "bad.json"
+    base.write_text(json.dumps(serve_doc()))
+    good.write_text(json.dumps(serve_doc(rps=295.0)))
+    bad.write_text(json.dumps(serve_doc(rps=300.0 * 0.80)))
+    cmd = [sys.executable, str(ROOT / "benchmarks" / "regression.py")]
+    ok = subprocess.run(cmd + ["--baseline", str(base),
+                               "--fresh", str(good)],
+                        capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    assert "all" in ok.stdout and "OK" in ok.stdout
+    fail = subprocess.run(cmd + ["--baseline", str(base),
+                                 "--fresh", str(bad)],
+                          capture_output=True, text=True)
+    assert fail.returncode == 1
+    assert "REGRESSED" in fail.stdout
+    assert "requests_per_s" in fail.stdout
+    # best-of across both fresh docs recovers: the good run wins
+    merged = subprocess.run(cmd + ["--baseline", str(base), "--fresh",
+                                   str(bad), str(good)],
+                            capture_output=True, text=True)
+    assert merged.returncode == 0, merged.stdout + merged.stderr
+
+
+def test_committed_baselines_self_compare_clean():
+    """Every committed BENCH_*.json extracts and passes against itself —
+    the gate's happy path holds for the real artifacts."""
+    for name in ("BENCH_serve.json", "BENCH_train.json",
+                 "BENCH_plan.json"):
+        doc = json.loads((ROOT / name).read_text())
+        m = extract_metrics(doc)
+        assert m, f"{name} produced no metrics"
+        assert all(r["ok"] for r in compare(m, dict(m)))
