@@ -50,6 +50,30 @@ def run(csv: Csv, quick: bool = False):
     csv.add("pallas_flash_attention[interpret]", 0.0,
             f"max_err={float(jnp.abs(out - want).max()):.2e}")
 
+    # paged decode attention: Pallas gather kernel vs the pure-jnp oracle
+    # on a permuted page table (the paged engine's numerical core), plus
+    # the timed jnp reference path the engine actually runs on CPU
+    from repro.kernels.paged_attention import paged_attention
+    pb, phq, phk, pd, psize, m = 8, 8, 2, 64, 16, 8
+    num_pages = pb * m + 2
+    pq = jnp.asarray(rng.normal(size=(pb, phq, pd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(num_pages, psize, phk, pd)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(num_pages, psize, phk, pd)),
+                     jnp.float32)
+    table = jnp.asarray(
+        rng.permutation(num_pages)[:pb * m].reshape(pb, m), jnp.int32)
+    pos = jnp.asarray(rng.integers(1, m * psize, pb), jnp.int32)
+    pout = paged_attention(pq, kp, vp, table, pos, interpret=True)
+    pwant = ref.paged_attention_ref(pq, kp, vp, table, pos)
+    csv.add("pallas_paged_attention[interpret]", 0.0,
+            f"max_err={float(jnp.abs(pout - pwant).max()):.2e}")
+    fref = jax.jit(ref.paged_attention_ref)
+    us4 = time_us(lambda: jax.block_until_ready(
+        fref(pq, kp, vp, table, pos)), repeat=3)
+    csv.add("paged_attention_ref[jit]", us4,
+            f"b={pb};pages_per_row={m};page={psize}")
+
 
 if __name__ == "__main__":
     c = Csv()

@@ -70,6 +70,7 @@ _SUFFIX_CLASS = [
     ("steps", "count"),
     ("decode_tokens", "count"),
     ("prefill_tokens", "count"),
+    ("peak_cache_bytes", "count"),
     ("plan_bytes", "count"),
     ("nnz", "count"),
     ("total_samples", "count"),
@@ -120,6 +121,15 @@ def extract_metrics(doc: dict) -> Dict[str, float]:
                  "decode_tokens")
             _put(out, f"{pre}.continuous.prefill_tokens", co,
                  "prefill_tokens")
+            _put(out, f"{pre}.continuous.peak_cache_bytes", co,
+                 "peak_cache_bytes")
+            pg = sc.get("paged", {})
+            _put(out, f"{pre}.paged.requests_per_s", pg, "requests_per_s")
+            _put(out, f"{pre}.paged.decode_tok_per_s", pg,
+                 "decode_tok_per_s")
+            _put(out, f"{pre}.paged.decode_tokens", pg, "decode_tokens")
+            _put(out, f"{pre}.paged.peak_cache_bytes", pg,
+                 "peak_cache_bytes")
     elif bench == "train_scaling":
         for sw in doc.get("sweeps", []):
             pre = f"train.ways{sw['ways']}"

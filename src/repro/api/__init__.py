@@ -31,13 +31,13 @@ from repro.api.runner import (build_context, build_data, build_model,
 from repro.api.serving import (ServeContext, build_serve_context,
                                build_workload, restore_params, run_serve,
                                verify_report)
-from repro.api.specs import (AdmissionSpec, ArrivalSpec, ClockSpec,
-                             DataSpec, EngineSpec, EvalSpec, ExecutionSpec,
-                             ExperimentSpec, ModelSpec, ObsSpec,
-                             OptimizerSpec, ProtocolSpec, ReportSpec,
-                             SamplerSpec, SchedulerSpec, ServeSpec,
-                             SpecError, StragglerSpec, TenantSpec,
-                             WorkloadSpec)
+from repro.api.specs import (AdmissionSpec, ArrivalSpec, CacheSpec,
+                             ClockSpec, DataSpec, EngineSpec, EvalSpec,
+                             ExecutionSpec, ExperimentSpec, ModelSpec,
+                             ObsSpec, OptimizerSpec, ProtocolSpec,
+                             ReportSpec, SamplerSpec, SamplingSpec,
+                             SchedulerSpec, ServeSpec, SpecError,
+                             StragglerSpec, TenantSpec, WorkloadSpec)
 
 __all__ = [
     "ExperimentSpec", "ModelSpec", "OptimizerSpec", "DataSpec",
@@ -45,6 +45,7 @@ __all__ = [
     "ObsSpec", "StragglerSpec", "SpecError",
     "ServeSpec", "EngineSpec", "AdmissionSpec", "SchedulerSpec",
     "WorkloadSpec", "ClockSpec", "ReportSpec", "TenantSpec", "ArrivalSpec",
+    "CacheSpec", "SamplingSpec",
     "run", "fit", "build_context", "build_data", "build_model",
     "build_optimizer", "default_callbacks",
     "run_serve", "build_serve_context", "build_workload", "ServeContext",

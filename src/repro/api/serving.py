@@ -150,8 +150,8 @@ def verify_report(report, ctx: ServeContext, requests=None,
             mismatches.append(req.rid)
     if mismatches:
         raise RuntimeError(
-            f"continuous outputs diverge from single-request decoding: "
-            f"rids {mismatches}")
+            f"{report.engine} outputs diverge from single-request "
+            f"decoding: rids {mismatches}")
     return {"checked": k, "mismatches": []}
 
 

@@ -555,6 +555,60 @@ class WorkloadSpec(SpecBase):
 
 
 @dataclasses.dataclass(frozen=True)
+class CacheSpec(SpecBase):
+    """Paged KV-cache geometry (the ``paged`` engine; repro.runtime.paging).
+
+    ``page_size`` is the fixed page length in token positions;
+    ``num_pages`` is the pool's physical page count and defaults to
+    ``num_slots * ceil(slot_len / page_size)`` — same worst-case token
+    capacity as the slot pool, so slot-vs-page comparisons are
+    apples-to-apples and the paged win shows up as *in-use* bytes, not a
+    smaller ceiling. Provision fewer pages to cap memory below worst
+    case; admission then holds free pages >= next-step demand (the GPSL
+    invariant restated in pages) and the engine preempts to stay inside
+    the pool. Ignored by the ``continuous``/``static`` engines.
+    """
+    page_size: int = 16
+    num_pages: Optional[int] = None
+
+    def validate(self) -> "CacheSpec":
+        self._require(self.page_size >= 1, "page_size must be >= 1")
+        self._require(self.num_pages is None or self.num_pages >= 1,
+                      "num_pages must be >= 1 (or null)")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingSpec(SpecBase):
+    """Token selection per decode step (repro.runtime.sampling).
+
+    ``method`` is "greedy" (argmax — the reference_generate oracle's
+    choice, required by ``report.verify``) or "sample": temperature
+    softmax optionally truncated by top_k and/or nucleus top_p. Sampled
+    draws are keyed by ``(seed, rid, token_index)`` — not by engine
+    state — so the same spec reproduces the same tokens across runs,
+    across engines (paged vs continuous), and across preempt/resume
+    boundaries.
+    """
+    method: str = "greedy"
+    temperature: float = 1.0
+    top_k: Optional[int] = None
+    top_p: Optional[float] = None
+    seed: int = 0
+
+    def validate(self) -> "SamplingSpec":
+        self._require(self.method in ("greedy", "sample"),
+                      f"unknown sampling method {self.method!r}; "
+                      f"known: greedy, sample")
+        self._require(self.temperature > 0, "temperature must be positive")
+        self._require(self.top_k is None or self.top_k >= 1,
+                      "top_k must be >= 1 (or null)")
+        self._require(self.top_p is None or 0 < self.top_p <= 1,
+                      "top_p must be in (0, 1] (or null)")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
 class ClockSpec(SpecBase):
     """Scheduler clock: "wall" (real time, idle waits sleep) or "virtual"
     (deterministic tick per engine operation — replayable tests)."""
@@ -602,6 +656,9 @@ class ServeSpec(SpecBase):
         default_factory=SchedulerSpec)
     workload: WorkloadSpec = dataclasses.field(
         default_factory=WorkloadSpec)
+    cache: CacheSpec = dataclasses.field(default_factory=CacheSpec)
+    sampling: SamplingSpec = dataclasses.field(
+        default_factory=SamplingSpec)
     clock: ClockSpec = dataclasses.field(default_factory=ClockSpec)
     report: ReportSpec = dataclasses.field(default_factory=ReportSpec)
     obs: ObsSpec = dataclasses.field(default_factory=ObsSpec)
@@ -622,11 +679,18 @@ class ServeSpec(SpecBase):
         return (max(self.workload.prompt_lens)
                 + max(self.workload.max_new_tokens))
 
+    def resolved_num_pages(self) -> int:
+        if self.cache.num_pages is not None:
+            return self.cache.num_pages
+        p = self.cache.page_size
+        return self.resolved_num_slots() * -(-self.resolved_slot_len() // p)
+
     def validate(self) -> "ServeSpec":
         self._require(self.kind == "serve",
                       f"kind must be 'serve', got {self.kind!r}")
         for sub in (self.model, self.engine, self.admission, self.scheduler,
-                    self.workload, self.clock, self.report, self.obs):
+                    self.workload, self.cache, self.sampling, self.clock,
+                    self.report, self.obs):
             sub.validate()
         self._require(self.model.arch != "paper-cnn",
                       "serving needs a decoder LM arch, not the "
@@ -662,4 +726,19 @@ class ServeSpec(SpecBase):
             self._require(self.admission.tenants is None,
                           "the static engine has no per-request admission "
                           "and cannot serve multi-tenant shares")
+        if self.report.verify:
+            self._require(self.sampling.method == "greedy",
+                          "verify compares against greedy single-request "
+                          "decoding; sampling.method must be 'greedy'")
+        if self.engine.name == "static":
+            self._require(self.sampling.method == "greedy",
+                          "the static engine decodes greedily only")
+        if self.engine.name == "paged":
+            worst = (max(self.workload.prompt_lens)
+                     + max(self.workload.max_new_tokens))
+            self._require(
+                self.resolved_num_pages() * self.cache.page_size >= worst,
+                f"paged pool too small: num_pages*page_size must cover one "
+                f"worst-case request ({worst} tokens), or eviction can "
+                f"never free enough pages to finish it")
         return self

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention as _paged_attention
 from repro.kernels.ssm_scan import ssm_scan
 from repro.kernels.cross_entropy import fused_cross_entropy
 
@@ -40,6 +41,16 @@ def attention(q, k, v, *, causal: bool = True,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, page_table, pos, *,
+                    interpret: bool = True):
+    """Paged decode attention; shapes as in
+    repro.kernels.ref.paged_attention_ref. q: (B, Hq, D); k_pages/v_pages:
+    (NP, P, Hkv, D); page_table: (B, M) int32; pos: (B,) int32."""
+    return _paged_attention(q, k_pages, v_pages, page_table, pos,
+                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
 def selective_scan(x, dt, a, bmat, cmat, *, interpret: bool = True):
     """Mamba1 recurrence; shapes as in repro.kernels.ref.ssm_scan_ref."""
     bl = _pick_block(x.shape[1], 64)
@@ -59,5 +70,6 @@ def cross_entropy(hidden, w_vocab, labels, *, interpret: bool = True):
 
 # re-export oracles for convenience
 attention_ref = ref.attention_ref
+paged_attention_ref = ref.paged_attention_ref
 selective_scan_ref = ref.ssm_scan_ref
 cross_entropy_ref = ref.cross_entropy_ref

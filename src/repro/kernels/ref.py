@@ -38,6 +38,40 @@ def attention_ref(q, k, v, *, causal: bool = True,
     return out.astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pages, v_pages, page_table,
+                        pos) -> jnp.ndarray:
+    """Naive paged decode attention: gather pages, then dense softmax.
+
+    One query token per request attends over its KV history stored in
+    non-contiguous fixed-size pages. ``page_table[b, j]`` is the physical
+    page holding request ``b``'s logical positions ``[j*P, (j+1)*P)``;
+    table entries past the allocated prefix may point anywhere (they are
+    masked). ``pos[b]`` is the query's own position, so entries
+    ``0..pos[b]`` inclusive are attended.
+
+    q: (B, Hq, D); k_pages, v_pages: (NP, P, Hkv, D);
+    page_table: (B, M) int32; pos: (B,) int32. Returns (B, Hq, D).
+    """
+    b, hq, d = q.shape
+    psize, hkv = k_pages.shape[1], k_pages.shape[2]
+    m = page_table.shape[1]
+    rep = hq // hkv
+    k = k_pages[page_table].reshape(b, m * psize, hkv, d)
+    v = v_pages[page_table].reshape(b, m * psize, hkv, d)
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bhd,bkhd->bhk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(m * psize)[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
 def ssm_scan_ref(x, dt, a, bmat, cmat, h0=None):
     """Sequential mamba1-style selective scan (the recurrence ground truth).
 

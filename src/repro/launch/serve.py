@@ -46,6 +46,14 @@ def _legacy_overrides(args) -> List[str]:
         add("model.reduced", "true" if args.reduced else "false")
     if args.static:
         add("engine.name", "static")
+    if args.paged:
+        add("engine.name", "paged")
+    add("cache.page_size", args.page_size)
+    add("cache.num_pages", args.num_pages)
+    add("sampling.method", "sample" if args.sample else None)
+    add("sampling.temperature", args.temperature)
+    add("sampling.top_k", args.top_k)
+    add("sampling.top_p", args.top_p)
     add("workload.num_requests", args.requests)
     if args.prompt_len is not None:
         add("workload.prompt_lens", f"[{args.prompt_len}]")
@@ -79,6 +87,24 @@ def main(argv=None):
     ap.add_argument("--static", action="store_true",
                     help="use the static-batch engine instead of the "
                          "continuous runtime")
+    ap.add_argument("--paged", action="store_true",
+                    help="use the paged-KV engine (engine.name=paged): "
+                         "page-granular cache allocation, same admission "
+                         "invariant")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="paged engine: tokens per KV page "
+                         "(cache.page_size)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="paged engine: physical page count "
+                         "(cache.num_pages; default matches the slot "
+                         "pool's worst-case capacity)")
+    ap.add_argument("--sample", action="store_true",
+                    help="seeded stochastic sampling instead of greedy "
+                         "(sampling.method=sample; keyed by request id + "
+                         "token index, reproducible)")
+    ap.add_argument("--temperature", type=float, default=None)
+    ap.add_argument("--top-k", type=int, default=None)
+    ap.add_argument("--top-p", type=float, default=None)
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--prompt-len", type=int, default=None)
     ap.add_argument("--max-new", type=int, default=None)

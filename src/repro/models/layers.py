@@ -375,6 +375,30 @@ def decode_attention(q, k_cache, v_cache, pos, *,
     return out.astype(q.dtype).reshape(b, 1, hq, hd)
 
 
+def paged_decode_attention(q, k_pages, v_pages, page_table,
+                           pos) -> jnp.ndarray:
+    """Single-token attention over a paged KV cache (repro.runtime.paging).
+
+    q: (B, 1, Hq, hd); pages: (NP, P, Hc, hd); page_table: (B, M) int32 —
+    logical page j of row b lives at physical page ``page_table[b, j]``;
+    pos: (B,) absolute decode positions. Gathers the rows' pages into
+    position order and reuses :func:`decode_attention`'s masked-softmax
+    math, so a paged cache is token-identical to a contiguous slot under
+    greedy decoding (garbage past ``pos`` — padded table entries included
+    — is masked exactly as a slot's unwritten tail is). Fully-masked
+    softmax columns contribute exp(-1e30)≡0, so the result does not
+    depend on M*P vs the slot length. The Pallas gather kernel
+    (repro.kernels.paged_attention) computes the same quantity blockwise
+    for the accelerator path.
+    """
+    b, _, hq, hd = q.shape
+    psize, hc = k_pages.shape[1], k_pages.shape[2]
+    m = page_table.shape[1]
+    kc = k_pages[page_table].reshape(b, m * psize, hc, hd)
+    vc = v_pages[page_table].reshape(b, m * psize, hc, hd)
+    return decode_attention(q, kc, vc, pos, window=None)
+
+
 # ---------------------------------------------------------------------------
 # Attention block (params + apply)
 # ---------------------------------------------------------------------------

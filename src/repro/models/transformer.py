@@ -215,6 +215,39 @@ class _Blocks:
             y = L.mlp_apply(p["mlp"], hn2)
         return x + y, {"k": kc, "v": vc}
 
+    def attn_block_decode_paged(self, p, x, cache, pos, page_table):
+        """Decode over a paged KV cache (repro.runtime.paging).
+
+        ``cache["k"]/["v"]`` are page buffers (NP, P, Hc, hd) shared by
+        all rows; ``page_table`` (B, M) int32 maps each row's logical
+        pages to physical ones. The new token's kv is scattered to
+        physical page ``table[b, pos//P]`` at offset ``pos % P`` —
+        inactive rows must point their table at a scratch page so the
+        scatter cannot land on a live request's page.
+        """
+        cfg = self.cfg
+        b = x.shape[0]
+        hn = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+        pos = jnp.broadcast_to(jnp.asarray(pos), (b,))
+        positions = pos[:, None]
+        q, k, v = L.attention_qkv(p["attn"], hn, cfg, positions)
+        kc, vc = cache["k"], cache["v"]
+        k_rep, v_rep = self._repeat_kv(k), self._repeat_kv(v)
+        psize = kc.shape[1]
+        page = jnp.take_along_axis(page_table, (pos // psize)[:, None],
+                                   axis=1)[:, 0]
+        off = pos % psize
+        kc = kc.at[page, off].set(k_rep[:, 0])
+        vc = vc.at[page, off].set(v_rep[:, 0])
+        attn_out = L.paged_decode_attention(q, kc, vc, page_table, pos)
+        x = x + attn_out.reshape(b, 1, -1) @ p["attn"]["wo"]
+        hn2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, _ = L.moe_apply(p["moe"], hn2, cfg)
+        else:
+            y = L.mlp_apply(p["mlp"], hn2)
+        return x + y, {"k": kc, "v": vc}
+
     def ssm_block_decode(self, p, x, cache):
         cfg = self.cfg
         hn = L.rms_norm(x, p["norm"], cfg.norm_eps)
@@ -659,6 +692,44 @@ class LanguageModel:
         else:
             x, new_cache["server"] = self._decode_stack(
                 srv["blocks"], cache["server"], x, pos, window)
+        x = L.rms_norm(x, srv["final_norm"], cfg.norm_eps)
+        logits = (x @ self._lm_head(params)).astype(jnp.float32)
+        return logits, new_cache
+
+    def _decode_stack_paged(self, stacked_params, stacked_cache, x, pos,
+                            page_table):
+        def body(xx, inp):
+            lp, lc = inp
+            xx, nc = self.blocks.attn_block_decode_paged(lp, xx, lc, pos,
+                                                         page_table)
+            return xx, nc
+        return scan_stack(self.cfg, body, x, stacked_params, stacked_cache)
+
+    def decode_step_paged(self, params, cache, tokens, pos, page_table):
+        """One-token decode over a paged KV cache. tokens: (B, 1) int32;
+        pos: (B,) int32 per-row positions; page_table: (B, M) int32 from
+        :class:`repro.runtime.paging.PagePool` (one table shared by every
+        layer — the cache leaves carry a leading layer axis, so a page id
+        addresses the same physical page in each layer's buffers).
+
+        Attention-cache families only (dense/moe/vlm); the ssm/hybrid
+        recurrent state is per-row, not per-position, so paging does not
+        apply — the paged engine rejects those configs up front. Sliding
+        windows are likewise rejected there (a ring over pages is a
+        different allocator).
+
+        Returns (logits (B, 1, V), new_cache)."""
+        cfg = self.cfg
+        if cfg.family in ("ssm", "hybrid"):
+            raise NotImplementedError(
+                "paged decode supports attention-cache families only")
+        x = params["client"]["embed"][tokens]
+        new_cache = dict(cache)
+        x, new_cache["client"] = self._decode_stack_paged(
+            params["client"]["blocks"], cache["client"], x, pos, page_table)
+        srv = params["server"]
+        x, new_cache["server"] = self._decode_stack_paged(
+            srv["blocks"], cache["server"], x, pos, page_table)
         x = L.rms_norm(x, srv["final_norm"], cfg.norm_eps)
         logits = (x @ self._lm_head(params)).astype(jnp.float32)
         return logits, new_cache

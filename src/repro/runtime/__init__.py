@@ -9,17 +9,20 @@ position — in one device call. See docs/serving.md.
 
 Every pluggable piece registers with :mod:`repro.api.registry` as an import
 side effect of this package: engines ``"continuous"``
-(:class:`ContinuousEngine`) and ``"static"`` (:class:`BatchedServer`),
-scheduler policies ``"fifo"``/``"ljf"``, and the ``"budget"`` admission
-controller — all reachable by name from a declarative ``ServeSpec``
-(``repro.api.run``).
+(:class:`ContinuousEngine`), ``"paged"`` (:class:`PagedEngine`, page-table
+KV allocation — see repro.runtime.paging), and ``"static"``
+(:class:`BatchedServer`), scheduler policies ``"fifo"``/``"ljf"``, and the
+``"budget"`` admission controller — all reachable by name from a
+declarative ``ServeSpec`` (``repro.api.run``).
 """
 from repro.runtime.engine import (ContinuousEngine, ServeReport,
                                   reference_generate)
 from repro.runtime.kvcache import KVCachePool
+from repro.runtime.paging import PagedEngine, PagePool
 from repro.runtime.queue import (AdmissionController, RequestQueue,
                                  ServeRequest, TenantAdmissionController,
                                  apportion)
+from repro.runtime.sampling import TokenSampler, sample_tokens
 from repro.runtime.scheduler import (Scheduler, VirtualClock, WallClock,
                                      make_clock, straggler_arrivals)
 from repro.runtime.static import BatchedServer, Request
@@ -28,9 +31,10 @@ from repro.runtime.workload import (bursty_arrivals, diurnal_arrivals,
                                     poisson_arrivals)
 
 __all__ = ["AdmissionController", "BatchedServer", "ContinuousEngine",
-           "KVCachePool", "Request", "RequestQueue", "Scheduler",
-           "ServeReport", "ServeRequest", "TenantAdmissionController",
-           "VirtualClock", "WallClock", "apportion", "bursty_arrivals",
-           "diurnal_arrivals", "generate_arrivals", "heavy_tail_arrivals",
-           "make_clock", "poisson_arrivals", "reference_generate",
+           "KVCachePool", "PagePool", "PagedEngine", "Request",
+           "RequestQueue", "Scheduler", "ServeReport", "ServeRequest",
+           "TenantAdmissionController", "TokenSampler", "VirtualClock",
+           "WallClock", "apportion", "bursty_arrivals", "diurnal_arrivals",
+           "generate_arrivals", "heavy_tail_arrivals", "make_clock",
+           "poisson_arrivals", "reference_generate", "sample_tokens",
            "straggler_arrivals"]

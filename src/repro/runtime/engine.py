@@ -32,7 +32,8 @@ import numpy as np
 
 from repro.api.registry import register_engine
 from repro.models import build_model
-from repro.obs.metrics import group_percentiles, percentiles
+from repro.obs.metrics import (MetricsRegistry, group_percentiles,
+                               percentiles)
 from repro.runtime.kvcache import KVCachePool
 from repro.runtime.queue import ServeRequest
 
@@ -90,6 +91,10 @@ class ServeReport:
     ttft_shared: bool = False
     preemptions: int = 0
     tenant_shares: Optional[Dict[str, int]] = None  # last computed shares
+    # KV-memory accounting (pool.cache_stats()): capacity/peak bytes,
+    # utilization, fragmentation — the slot-pooled vs paged memory story
+    # as a measured report field, not an assertion (docs/serving.md).
+    cache_utilization: Optional[Dict[str, Any]] = None
 
     @property
     def requests_per_s(self) -> float:
@@ -131,6 +136,8 @@ class ServeReport:
                 "per_request": self.per_request}
         if self.tenant_shares is not None:
             out["tenant_shares"] = self.tenant_shares
+        if self.cache_utilization is not None:
+            out["cache_utilization"] = self.cache_utilization
         if self.verified is not None:
             out["verified"] = self.verified
         return out
@@ -143,6 +150,19 @@ class ServeReport:
                 f"ttft p50/p95 {ttft['p50']:.1f}/{ttft['p95']:.1f}ms, "
                 f"max_active={self.max_active}"
                 + (f"/{self.token_budget}" if self.token_budget else ""))
+
+
+class _SlotBudgeter:
+    """Admission budget for the slot pool: one free slot per request."""
+
+    def __init__(self, pool):
+        self._free = pool.num_free
+
+    def can_take(self, req: ServeRequest) -> bool:
+        return self._free > 0
+
+    def take(self, req: ServeRequest) -> None:
+        self._free -= 1
 
 
 def _resolve_now(now) -> float:
@@ -162,36 +182,80 @@ class ContinuousEngine:
     continuous outputs are not comparable for vlm archs."""
 
     def __init__(self, cfg, params=None, *, num_slots: int,
-                 slot_len: int, seed: int = 0, model=None):
+                 slot_len: int, seed: int = 0, model=None, sampling=None):
+        self._check_family(cfg)
+        self.cfg = cfg
+        self.model = model if model is not None else build_model(cfg)
+        self.params = (params if params is not None
+                       else self.model.init(jax.random.PRNGKey(seed)))
+        from repro.runtime.sampling import TokenSampler
+        self.sampler = TokenSampler(sampling)
+        self.pool = self._make_pool(num_slots, slot_len)
+        self._build_device_fns(slot_len)
+        p = self.pool.num_slots
+        self._rid = np.full(p, -1, np.int64)       # -1 = slot idle
+        self._tok = np.zeros(p, np.int32)          # last emitted token
+        self._remaining = np.zeros(p, np.int64)    # tokens still to emit
+        self._idx = np.zeros(p, np.int32)          # next output token index
+        self.metrics = MetricsRegistry()
+        self.records: Dict[int, Dict[str, Any]] = {}
+        self.steps = 0
+        self.decode_tokens = 0
+        self.prefill_tokens = 0
+
+    # subclass hooks ------------------------------------------------------
+    @staticmethod
+    def _check_family(cfg) -> None:
         if cfg.family == "audio":
             raise NotImplementedError(
                 "the encoder-decoder family decodes with a scalar position "
                 "(learned absolute embeddings) and is not served by the "
                 "continuous runtime; use the static server")
-        self.cfg = cfg
-        self.model = model if model is not None else build_model(cfg)
-        self.params = (params if params is not None
-                       else self.model.init(jax.random.PRNGKey(seed)))
-        self.pool = KVCachePool(self.model, num_slots, slot_len)
 
-        def _step(params, cache, tokens, pos):
-            # fused decode + greedy pick: one dispatch, no logits transfer
-            logits, new_cache = self.model.decode_step(params, cache,
-                                                       tokens, pos)
-            return (jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32),
-                    new_cache)
+    def _make_pool(self, num_slots: int, slot_len: int):
+        return KVCachePool(self.model, num_slots, slot_len)
+
+    def _build_device_fns(self, slot_len: int) -> None:
+        if self.sampler.greedy:
+            def _step(params, cache, tokens, pos):
+                # fused decode + greedy pick: one dispatch, no logits
+                # transfer
+                logits, new_cache = self.model.decode_step(params, cache,
+                                                           tokens, pos)
+                return (jnp.argmax(logits[:, -1],
+                                   axis=-1).astype(jnp.int32), new_cache)
+        else:
+            def _step(params, cache, tokens, pos, rids, idxs):
+                logits, new_cache = self.model.decode_step(params, cache,
+                                                           tokens, pos)
+                return (self.sampler.sample(logits[:, -1], rids, idxs),
+                        new_cache)
 
         self._decode = jax.jit(_step, donate_argnums=(1,))
         self._prefill = jax.jit(functools.partial(self.model.prefill,
                                                   cache_len=slot_len))
-        p = self.pool.num_slots
-        self._rid = np.full(p, -1, np.int64)       # -1 = slot idle
-        self._tok = np.zeros(p, np.int32)          # last emitted token
-        self._remaining = np.zeros(p, np.int64)    # tokens still to emit
-        self.records: Dict[int, Dict[str, Any]] = {}
-        self.steps = 0
-        self.decode_tokens = 0
-        self.prefill_tokens = 0
+        self._sample_prefill = jax.jit(self.sampler.sample)
+
+    def _run_prefill(self, tokens, plen: int):
+        return self._prefill(self.params, {"tokens": tokens})
+
+    def _device_step(self, tokens, pos, active):
+        if self.sampler.greedy:
+            return self._decode(self.params, self.pool.buffers, tokens,
+                                pos)
+        rids = jnp.asarray(np.where(active, self._rid, 0).astype(np.int32))
+        idxs = jnp.asarray(np.where(active, self._idx, 0).astype(np.int32))
+        return self._decode(self.params, self.pool.buffers, tokens, pos,
+                            rids, idxs)
+
+    def drain_evicted(self) -> List[ServeRequest]:
+        """Resume requests for victims the *engine* evicted mid-step.
+
+        The slot engine never self-evicts (capacity is reserved up front),
+        so this is empty here; the paged engine hands back requests it
+        preempted to stay inside the page pool and the scheduler requeues
+        them."""
+        return []
 
     @classmethod
     def from_spec(cls, cfg, spec, params=None,
@@ -200,7 +264,7 @@ class ContinuousEngine:
         pass ``model`` to adopt an already-built module tree for ``cfg``."""
         return cls(cfg, params=params, num_slots=spec.resolved_num_slots(),
                    slot_len=spec.resolved_slot_len(), seed=spec.engine.seed,
-                   model=model)
+                   model=model, sampling=getattr(spec, "sampling", None))
 
     def serve(self, requests: List[ServeRequest], spec,
               clock=None, tracer=None) -> ServeReport:
@@ -228,6 +292,8 @@ class ContinuousEngine:
         self._rid[:] = -1
         self._tok[:] = 0
         self._remaining[:] = 0
+        self._idx[:] = 0
+        self.metrics = MetricsRegistry()
         self.records = {}
         self.steps = self.decode_tokens = self.prefill_tokens = 0
 
@@ -237,6 +303,18 @@ class ContinuousEngine:
 
     def has_capacity(self) -> bool:
         return self.pool.num_free > 0
+
+    def admission_budgeter(self):
+        """Stateful per-loop admission budget the scheduler consults.
+
+        The slot engine's budget is simply the free-slot count; the paged
+        engine's additionally requires enough free *pages* for the
+        candidate's prompt plus one growth page per already-active request
+        (the GPSL fixed-work invariant restated in pages). ``can_take``
+        must stay true after ``take`` for every admitted request in the
+        same loop iteration — the budgeter tracks its own reservations.
+        """
+        return _SlotBudgeter(self.pool)
 
     def active_requests(self) -> List[Dict[str, Any]]:
         """Live (slot-holding) requests: rid, tenant, emitted count.
@@ -291,8 +369,19 @@ class ContinuousEngine:
                      now) -> None:
         t_start = _resolve_now(now)    # prefill begins: enqueue ends here
         tokens = jnp.asarray(np.stack([r.prompt for r in chunk]))
-        logits, cache, _ = self._prefill(self.params, {"tokens": tokens})
-        firsts = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        logits, cache, _ = self._run_prefill(tokens, plen)
+        if self.sampler.greedy:
+            firsts = np.asarray(jnp.argmax(logits,
+                                           axis=-1).astype(jnp.int32))
+        else:
+            # First tokens from prefill logits through the same keyed
+            # sampler as decode. A resuming request's next token index is
+            # its emitted count, so its key stream continues unbroken.
+            rids = np.asarray([r.rid for r in chunk], np.int32)
+            idxs = np.asarray([self._resume_index(r) for r in chunk],
+                              np.int32)
+            firsts = np.asarray(self._sample_prefill(
+                logits, jnp.asarray(rids), jnp.asarray(idxs)))
         t = _resolve_now(now)          # after the sync: TTFT covers prefill
         self.prefill_tokens += plen * len(chunk)
         for row, req in enumerate(chunk):
@@ -312,9 +401,10 @@ class ContinuousEngine:
                        "admit_start_s": t_start,
                        "admit_s": t, "first_token_s": t, "done_s": None,
                        "tenant": req.tenant, "preemptions": 0,
+                       "prompt": np.asarray(req.prompt),
                        "tokens": [first]}
                 self.records[req.rid] = rec
-            if req.max_new_tokens == 1:
+            if len(rec["tokens"]) >= rec["max_new_tokens"]:
                 rec["done_s"] = t
                 continue
             slot = self.pool.alloc()
@@ -323,7 +413,17 @@ class ContinuousEngine:
             self.pool.insert(cache, slot, plen, row=row)
             self._rid[slot] = req.rid
             self._tok[slot] = first
-            self._remaining[slot] = req.max_new_tokens - 1
+            self._remaining[slot] = rec["max_new_tokens"] \
+                - len(rec["tokens"])
+            self._idx[slot] = len(rec["tokens"])
+
+    def _resume_index(self, req: ServeRequest) -> int:
+        """0-based output index of the *next* token for this request —
+        the emitted count when it is a resume_pending record, else 0."""
+        rec = self.records.get(req.rid)
+        if rec is not None and rec.get("resume_pending"):
+            return len(rec["tokens"])
+        return 0
 
     def preempt(self, rid: int) -> Dict[str, Any]:
         """Evict an in-flight request: free its KV slot, keep its record.
@@ -375,8 +475,7 @@ class ContinuousEngine:
             return []
         tokens = jnp.asarray(np.where(active, self._tok, 0)[:, None])
         pos = jnp.asarray(np.where(active, self.pool.pos, 0).astype(np.int32))
-        nxt, new_cache = self._decode(self.params, self.pool.buffers,
-                                      tokens, pos)
+        nxt, new_cache = self._device_step(tokens, pos, active)
         self.pool.swap(new_cache)
         nxt = np.asarray(nxt)
         t = _resolve_now(now)        # after the sync: latency covers decode
@@ -389,12 +488,25 @@ class ContinuousEngine:
             self._tok[slot] = nxt[slot]
             self.pool.pos[slot] += 1
             self._remaining[slot] -= 1
+            self._idx[slot] += 1
             if self._remaining[slot] == 0:
                 self.records[rid]["done_s"] = t
                 self._rid[slot] = -1
                 self.pool.release(int(slot))
                 finished.append(rid)
+        self._observe_cache()
         return finished
+
+    def _observe_cache(self) -> None:
+        """Per-step KV-memory gauges (kv_*_in_use, kv_fragmentation) so a
+        run's peak/min land in ``metrics.snapshot()`` and, through the
+        scheduler's tracer counters, in the live event log."""
+        stats = self.pool.cache_stats()
+        kind = stats["kind"]
+        self.metrics.gauge(f"kv_{kind}s_in_use").set(
+            stats[f"{kind}s_in_use"])
+        self.metrics.gauge("kv_fragmentation").set(stats["fragmentation"])
+        self.metrics.gauge("kv_in_use_bytes").set(stats["in_use_bytes"])
 
     # ----- reporting -----
     def build_report(self, engine_name: str, wall_s: float,
@@ -403,6 +515,10 @@ class ContinuousEngine:
                      tenant_shares: Optional[Dict[str, int]] = None
                      ) -> ServeReport:
         per_request = request_rows(self.records)
+        stats = self.pool.cache_stats()
+        cap = stats["capacity_bytes"]
+        stats["utilization"] = (stats["peak_in_use_bytes"] / cap
+                                if cap else 0.0)
         return ServeReport(
             engine=engine_name, arch=self.cfg.name, wall_s=wall_s,
             num_requests=len(per_request),
@@ -413,7 +529,8 @@ class ContinuousEngine:
             step_active=step_active, per_request=per_request,
             preemptions=sum(r.get("preemptions", 0)
                             for r in self.records.values()),
-            tenant_shares=tenant_shares)
+            tenant_shares=tenant_shares,
+            cache_utilization=stats)
 
 
 @functools.lru_cache(maxsize=32)

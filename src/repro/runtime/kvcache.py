@@ -58,6 +58,12 @@ class KVCachePool:
         self._live: set = set()
         self.alloc_count = 0
         self.release_count = 0
+        self.peak_live = 0
+        total_bytes = sum(leaf.nbytes
+                          for leaf in jax.tree_util.tree_leaves(
+                              self.buffers))
+        self.bytes_per_token = total_bytes / (self.num_slots
+                                              * self.slot_len)
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
 
     # ----- slot lifecycle -----
@@ -75,6 +81,7 @@ class KVCachePool:
         slot = self._free.pop()
         self._live.add(slot)
         self.alloc_count += 1
+        self.peak_live = max(self.peak_live, self.num_live)
         return slot
 
     def release(self, slot: int) -> None:
@@ -126,8 +133,35 @@ class KVCachePool:
         """Adopt the cache pytree returned by a donated decode step."""
         self.buffers = new_buffers
 
+    # ----- memory accounting -----
+    def cache_stats(self) -> dict:
+        """KV-memory accounting in a pool-kind-neutral schema.
+
+        A live slot *reserves* ``slot_len`` tokens of cache but only
+        *uses* ``pos[slot]`` of them — ``fragmentation`` is the reserved
+        fraction sitting idle, the quantity the paged pool exists to
+        reclaim (its allocation unit is a page, so its idle fraction is
+        bounded by one page per request instead of slot_len − len).
+        """
+        used = int(sum(int(self.pos[s]) for s in self._live))
+        allocated = self.num_live * self.slot_len
+        peak_alloc = self.peak_live * self.slot_len
+        return {
+            "kind": "slot",
+            "capacity_bytes": int(self.bytes_per_token * self.num_slots
+                                  * self.slot_len),
+            "in_use_bytes": int(self.bytes_per_token * allocated),
+            "peak_in_use_bytes": int(self.bytes_per_token * peak_alloc),
+            "used_tokens": used,
+            "allocated_tokens": allocated,
+            "fragmentation": (1.0 - used / allocated) if allocated else 0.0,
+            "slots_in_use": self.num_live,
+            "peak_slots_in_use": self.peak_live,
+        }
+
     def reset(self) -> None:
         """Zero the bookkeeping (buffers are overwritten on insert)."""
         self._free = list(range(self.num_slots - 1, -1, -1))
         self._live = set()
         self.pos[:] = 0
+        self.peak_live = 0

@@ -1,0 +1,81 @@
+"""Seeded token sampling for the serving runtime (SamplingSpec semantics).
+
+Sampled draws are keyed by ``(seed, rid, token_index)``: each emitted
+token folds its request id and its 0-based output index into the spec
+seed, then draws once from the (temperature / top-k / top-p filtered)
+distribution. Because the key depends only on spec-level identity — never
+on pool layout, admission order, or step count — the same spec yields the
+same tokens across runs, across engines (``paged`` vs ``continuous``),
+and across preempt/resume boundaries (a resumed request re-emits from
+``token_index = len(emitted)``, exactly where its key stream left off).
+
+Greedy stays the plain argmax the engines always used — the
+``reference_generate`` token-identity oracle is untouched by this module.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def sample_tokens(logits, rids, idxs, *, temperature: float = 1.0,
+                  top_k: Optional[int] = None,
+                  top_p: Optional[float] = None,
+                  seed: int = 0) -> jnp.ndarray:
+    """Draw one token per row. logits: (B, V) — any float dtype; rids,
+    idxs: (B,) int32 (request id, 0-based output token index).
+    Returns (B,) int32. Pure and jit-friendly (the filter knobs are
+    Python constants, the key derivation is per-row fold_in)."""
+    lg = logits.astype(jnp.float32) / float(temperature)
+    v = lg.shape[-1]
+    if top_k is not None and top_k < v:
+        kth = jnp.sort(lg, axis=-1)[:, v - top_k][:, None]
+        lg = jnp.where(lg < kth, _NEG_INF, lg)
+    if top_p is not None and top_p < 1.0:
+        srt = jnp.sort(lg, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(srt, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        keep = (cum - probs) < top_p          # the top-1 always survives
+        thresh = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1,
+                         keepdims=True)
+        lg = jnp.where(lg < thresh, _NEG_INF, lg)
+
+    def draw(rid, idx, row):
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(seed), rid), idx)
+        return jax.random.categorical(key, row)
+
+    return jax.vmap(draw)(rids, idxs, lg).astype(jnp.int32)
+
+
+class TokenSampler:
+    """A SamplingSpec bound to callable form for the engines.
+
+    ``sampler.greedy`` keeps the engines on their historical fused-argmax
+    decode step (bit-identical code path — no behavior change when the
+    spec holds the default). Non-greedy engines call ``sampler.sample``
+    inside their jitted step with the per-row (rid, token_index) arrays.
+    """
+
+    def __init__(self, spec=None):
+        self.method = getattr(spec, "method", "greedy")
+        self.temperature = float(getattr(spec, "temperature", 1.0))
+        self.top_k = getattr(spec, "top_k", None)
+        self.top_p = getattr(spec, "top_p", None)
+        self.seed = int(getattr(spec, "seed", 0))
+
+    @property
+    def greedy(self) -> bool:
+        return self.method == "greedy"
+
+    def sample(self, logits, rids, idxs) -> jnp.ndarray:
+        if self.greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return sample_tokens(logits, rids, idxs,
+                             temperature=self.temperature,
+                             top_k=self.top_k, top_p=self.top_p,
+                             seed=self.seed)

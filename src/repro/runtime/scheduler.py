@@ -261,16 +261,16 @@ class Scheduler:
         admits = adm.grants(eng.num_active())
         if self.max_admits_per_step is not None:
             admits = min(admits, self.max_admits_per_step)
-        free = eng.pool.num_free
+        budget = eng.admission_budgeter()
         selected: List[ServeRequest] = []
         rest: List[ServeRequest] = []
         for r in ready:
-            if admits > 0 and free > 0 \
+            if admits > 0 and budget.can_take(r) \
                     and active_ct[r.tenant] < shares.get(r.tenant, 0):
+                budget.take(r)
                 selected.append(r)
                 active_ct[r.tenant] += 1
                 admits -= 1
-                free -= 1
             else:
                 rest.append(r)
         ready[:] = rest
@@ -313,19 +313,31 @@ class Scheduler:
                     clock.advance()
             else:
                 # Admission: grant freed budget in policy order; same-
-                # length requests in a grant share a prefill call.
+                # length requests in a grant share a prefill call. The
+                # engine's budgeter owns the capacity arithmetic (free
+                # slots for the slot pool, prompt pages + growth headroom
+                # for the paged pool); skipped requests keep their order.
                 admits = adm.grants(eng.num_active())
                 if self.max_admits_per_step is not None:
                     admits = min(admits, self.max_admits_per_step)
-                take = min(admits, len(ready), eng.pool.num_free)
-                if take > 0:
+                budget = eng.admission_budgeter()
+                selected: List[ServeRequest] = []
+                rest: List[ServeRequest] = []
+                for r in ready:
+                    if len(selected) < admits and budget.can_take(r):
+                        budget.take(r)
+                        selected.append(r)
+                    else:
+                        rest.append(r)
+                ready[:] = rest
+                if selected:
                     # clock.now passed as a callable: the engine stamps
                     # TTFT after the prefill sync, so it includes the
                     # compute.
-                    with tracer.span("admit", cat="prefill", n=take):
-                        eng.admit_batch(ready[:take], clock.now)
-                    del ready[:take]
-                    adm.note_admit(take)
+                    with tracer.span("admit", cat="prefill",
+                                     n=len(selected)):
+                        eng.admit_batch(selected, clock.now)
+                    adm.note_admit(len(selected))
                     clock.advance()
             if eng.num_active() > 0:
                 adm.note_step(eng.num_active())
@@ -336,9 +348,22 @@ class Scheduler:
                                  active=eng.num_active()):
                     eng.step(clock.now)
                 clock.advance()
+                # Requests the engine itself evicted mid-step (the paged
+                # engine's out-of-pages valve) requeue exactly like a
+                # tenant preemption: back into ready, policy-ordered.
+                evicted = eng.drain_evicted()
+                if evicted:
+                    ready.extend(evicted)
+                    self._order(ready)
                 if tracer.enabled:
                     tracer.counter("active_slots", eng.num_active())
                     tracer.counter("queued", len(ready) + len(self.queue))
+                    stats = eng.pool.cache_stats()
+                    kind = stats["kind"]
+                    tracer.counter(f"kv_{kind}s_in_use",
+                                   stats[f"{kind}s_in_use"])
+                    tracer.counter("kv_fragmentation",
+                                   stats["fragmentation"])
             elif ready:
                 # budget exhausted with an empty pool cannot happen
                 # (budget ≥ 1); loop back to admit.
@@ -362,8 +387,8 @@ class Scheduler:
             if self._tenant_aware:
                 for t, n in adm.preemptions.items():
                     tracer.counter(f"preemptions.{t}", n)
-        return eng.build_report("continuous", wall, adm.token_budget,
-                                adm.step_active,
+        return eng.build_report(getattr(eng, "name", "continuous"), wall,
+                                adm.token_budget, adm.step_active,
                                 tenant_shares=self._last_shares)
 
     def queue_wait(self) -> None:

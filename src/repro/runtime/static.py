@@ -90,6 +90,10 @@ class BatchedServer:
             batch["frames"] = jnp.zeros((b, cfg.encoder_seq, cfg.d_model),
                                         cfg.jnp_dtype)
         logits, cache, pos = self._prefill(cache_len)(self.params, batch)
+        # The whole-batch cache is allocated up front and held to the last
+        # step — its size IS the static engine's peak KV memory.
+        self._cache_bytes = int(sum(
+            leaf.nbytes for leaf in jax.tree_util.tree_leaves(cache)))
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         for i, r in enumerate(requests):
             r.generated.append(int(tok[i, 0]))
@@ -145,6 +149,19 @@ class BatchedServer:
                     rid, r["arrival_s"], r["admit_start_s"], r["admit_s"],
                     r["done_s"], prompt_len=r["prompt_len"],
                     new_tokens=len(r["tokens"]))
+        # KV accounting in the pooled engines' cache_stats schema: the
+        # static batch reserves b x (plen + max_new) token rows for the
+        # whole run, so allocated == capacity == peak and fragmentation is
+        # everything the actual prompts + outputs didn't fill.
+        cap_tokens = b * (plen + max_new)
+        used = sum(len(r.prompt) + len(r.generated) for r in out)
+        util = {"kind": "static", "capacity_bytes": self._cache_bytes,
+                "in_use_bytes": self._cache_bytes,
+                "peak_in_use_bytes": self._cache_bytes,
+                "used_tokens": used, "allocated_tokens": cap_tokens,
+                "fragmentation": (1.0 - used / cap_tokens) if cap_tokens
+                else 0.0,
+                "utilization": 1.0}
         return ServeReport(
             engine="static", arch=self.cfg.name, wall_s=wall,
             num_requests=b,
@@ -153,4 +170,5 @@ class BatchedServer:
             decode_tokens=b * (max_new - 1),
             steps=max_new - 1, token_budget=None,
             max_active=b, step_active=[b] * max(max_new - 1, 0),
-            per_request=request_rows(records), ttft_shared=True)
+            per_request=request_rows(records), ttft_shared=True,
+            cache_utilization=util)

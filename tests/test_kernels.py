@@ -82,6 +82,57 @@ def test_fused_cross_entropy_sweep(dtype, t, d, v):
                                **_tol(dtype))
 
 
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("b,hq,hkv,d,psize,m", [
+    (3, 4, 4, 64, 16, 5),    # MHA
+    (2, 8, 2, 64, 8, 4),     # GQA 4:1
+    (4, 8, 1, 32, 16, 3),    # MQA
+])
+def test_paged_attention_sweep(dtype, b, hq, hkv, d, psize, m):
+    from repro.kernels.paged_attention import paged_attention
+    rng = np.random.default_rng(6)
+    num_pages = b * m + 2
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), dtype)
+    k_pages = jnp.asarray(rng.normal(size=(num_pages, psize, hkv, d)),
+                          dtype)
+    v_pages = jnp.asarray(rng.normal(size=(num_pages, psize, hkv, d)),
+                          dtype)
+    # non-contiguous tables: a permutation of the physical pages
+    table = jnp.asarray(
+        rng.permutation(num_pages)[:b * m].reshape(b, m), jnp.int32)
+    # varied positions, including one row mid-page and one at page 0
+    pos = jnp.asarray(rng.integers(0, m * psize, b), jnp.int32)
+    pos = pos.at[0].set(psize // 2).at[-1].set(0)
+    got = paged_attention(q, k_pages, v_pages, table, pos, interpret=True)
+    want = ref.paged_attention_ref(q, k_pages, v_pages, table, pos)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_paged_attention_matches_contiguous_decode():
+    """Gathering pages in table order reproduces contiguous-cache decode
+    attention exactly — the numerical core of the paged engine's
+    token-identity guarantee (repro.models.layers.paged_decode_attention
+    makes the same argument at the model layer)."""
+    from repro.models import layers as L
+    rng = np.random.default_rng(7)
+    b, hq, hkv, d, psize, m = 2, 4, 2, 32, 8, 4
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    k_pages = jnp.asarray(rng.normal(size=(b * m, psize, hkv, d)),
+                          jnp.float32)
+    v_pages = jnp.asarray(rng.normal(size=(b * m, psize, hkv, d)),
+                          jnp.float32)
+    table = jnp.asarray(rng.permutation(b * m).reshape(b, m), jnp.int32)
+    pos = jnp.asarray([11, 25], jnp.int32)
+    got = ref.paged_attention_ref(q, k_pages, v_pages, table, pos)
+    # assemble the contiguous cache each row's table describes
+    kc = k_pages[table].reshape(b, m * psize, hkv, d)
+    vc = v_pages[table].reshape(b, m * psize, hkv, d)
+    want = L.decode_attention(q[:, None], kc, vc, pos)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
 def test_ops_wrappers_model_layout():
     rng = np.random.default_rng(4)
     q = jnp.asarray(rng.normal(size=(2, 128, 4, 32)), jnp.float32)

@@ -1,0 +1,297 @@
+"""Paged KV-cache subsystem: PagePool invariants, paged-vs-continuous
+token identity (greedy and seeded sampling), preemption/resume page
+hygiene, and the out-of-pages eviction valve."""
+import numpy as np
+import pytest
+
+from repro.api.serving import build_serve_context, build_workload, \
+    verify_report
+from repro.api.specs import (AdmissionSpec, CacheSpec, ClockSpec,
+                             EngineSpec, ModelSpec, SamplingSpec,
+                             SchedulerSpec, ServeSpec, SpecError,
+                             TenantSpec, WorkloadSpec)
+from repro.api.runner import build_model
+from repro.runtime.paging import PagePool
+
+ARCH = "granite-3-2b"
+
+
+def _model(slot_len=64):
+    return build_model(ModelSpec(arch=ARCH, reduced=True),
+                       seq_len=slot_len)
+
+
+def _spec(engine="paged", num_slots=4, slot_len=64, budget=4,
+          cache=None, sampling=None, workload=None, **kw):
+    return ServeSpec(
+        model=ModelSpec(arch=ARCH, reduced=True),
+        engine=EngineSpec(name=engine, num_slots=num_slots,
+                          slot_len=slot_len),
+        admission=AdmissionSpec(token_budget=budget, **kw),
+        scheduler=SchedulerSpec(policy="fifo"),
+        workload=workload or WorkloadSpec(
+            num_requests=10, prompt_lens=[5, 9, 17, 33],
+            max_new_tokens=[4, 12, 20]),
+        clock=ClockSpec(kind="virtual"),
+        cache=cache or CacheSpec(page_size=16),
+        sampling=sampling or SamplingSpec())
+
+
+def _serve(spec):
+    spec.validate()
+    ctx = build_serve_context(spec)
+    reqs = build_workload(spec, ctx.model.cfg.vocab_size)
+    report = ctx.engine.serve(reqs, spec)
+    return ctx, reqs, report
+
+
+def _tokens(report):
+    return {r["rid"]: r["tokens"] for r in report.per_request}
+
+
+# ---------------------------------------------------------------- PagePool
+
+class TestPagePool:
+    def test_alloc_release_roundtrip(self):
+        pool = PagePool(_model(), num_slots=3, slot_len=64, page_size=16)
+        assert pool.num_pages == 3 * 4
+        assert pool.num_free_pages == 12
+        slot = pool.alloc()
+        pool.insert(self._prefill_cache(pool, 20), slot, 20)
+        # 20 tokens at page_size 16 -> 2 pages
+        assert pool.pages_in_use == 2
+        assert pool.tables_np[slot, 2] == pool.scratch_page
+        pool.release(slot)
+        assert pool.pages_in_use == 0
+        assert pool.num_free_pages == 12
+        assert (pool.tables_np[slot] == pool.scratch_page).all()
+        pool.check_no_leaks()
+
+    def test_ensure_capacity_grows_one_page(self):
+        pool = PagePool(_model(), num_slots=2, slot_len=64, page_size=16)
+        slot = pool.alloc()
+        pool.insert(self._prefill_cache(pool, 16), slot, 16)
+        assert pool.pages_in_use == 1
+        # pos 16 needs logical page 1: one growth page
+        assert pool.ensure_capacity(slot)
+        assert pool.pages_in_use == 2
+        # idempotent until pos crosses the next boundary
+        assert pool.ensure_capacity(slot)
+        assert pool.pages_in_use == 2
+        pool.pos[slot] = 32
+        assert pool.ensure_capacity(slot)
+        assert pool.pages_in_use == 3
+        pool.check_no_leaks()
+
+    def test_ensure_capacity_reports_exhaustion(self):
+        pool = PagePool(_model(), num_slots=2, slot_len=64, page_size=16,
+                        num_pages=2)
+        slot = pool.alloc()
+        pool.insert(self._prefill_cache(pool, 32), slot, 32)
+        assert pool.ensure_capacity(slot) is False     # free list empty
+        other = pool.alloc()
+        pool.release(other)
+        pool.release(slot)                              # frees both pages
+        assert pool.num_free_pages == 2
+        pool.check_no_leaks()
+
+    def test_insert_without_pages_raises(self):
+        pool = PagePool(_model(), num_slots=2, slot_len=64, page_size=16,
+                        num_pages=1)
+        slot = pool.alloc()
+        with pytest.raises(RuntimeError, match="reserve prompt pages"):
+            pool.insert(self._prefill_cache(pool, 32), slot, 32)
+
+    def test_scatter_gather_roundtrip(self):
+        """What insert scatters into pages, the table gathers back in
+        position order — byte-identical to the contiguous prefill rows."""
+        import jax
+        import jax.numpy as jnp
+        model = _model()
+        pool = PagePool(model, num_slots=2, slot_len=64, page_size=16)
+        params = model.init(jax.random.PRNGKey(0))
+        tokens = jnp.asarray(
+            np.random.default_rng(0).integers(
+                1, model.cfg.vocab_size, (2, 24), np.int32))
+        _, cache, _ = model.prefill(params, {"tokens": tokens},
+                                    cache_len=32)
+        s0, s1 = pool.alloc(), pool.alloc()
+        pool.insert(cache, s0, 24, row=0)
+        pool.insert(cache, s1, 24, row=1)
+        src = jax.tree_util.tree_leaves(cache)
+        dst = jax.tree_util.tree_leaves(pool.buffers)
+        for src_leaf, dst_leaf in zip(src, dst):
+            for slot, row in ((s0, 0), (s1, 1)):
+                table = pool.tables_np[slot, :2]
+                gathered = np.asarray(dst_leaf[:, table]).reshape(
+                    src_leaf.shape[0], 32, *src_leaf.shape[3:])
+                np.testing.assert_array_equal(
+                    gathered, np.asarray(src_leaf[:, row]))
+        pool.check_no_leaks()
+
+    @staticmethod
+    def _prefill_cache(pool, plen):
+        import jax
+        import jax.numpy as jnp
+        model = _model()
+        params = model.init(jax.random.PRNGKey(0))
+        cl = -(-plen // pool.page_size) * pool.page_size
+        _, cache, _ = model.prefill(
+            params, {"tokens": jnp.zeros((1, plen), jnp.int32)},
+            cache_len=cl)
+        return cache
+
+
+# ------------------------------------------------- engine token identity
+
+class TestPagedEngine:
+    def test_paged_matches_continuous_and_reference(self):
+        _, _, cont = _serve(_spec(engine="continuous"))
+        ctx, reqs, paged = _serve(_spec(engine="paged"))
+        assert _tokens(paged) == _tokens(cont)
+        verify_report(paged, ctx, requests=reqs)
+        ctx.engine.pool.check_no_leaks()
+        assert paged.engine == "paged"
+
+    def test_odd_page_size(self):
+        """Page sizes that don't divide prompt lengths still round-trip."""
+        _, _, cont = _serve(_spec(engine="continuous"))
+        _, _, paged = _serve(_spec(cache=CacheSpec(page_size=7)))
+        assert _tokens(paged) == _tokens(cont)
+
+    def test_report_carries_cache_utilization(self):
+        _, _, rep = _serve(_spec())
+        cu = rep.cache_utilization
+        assert cu["kind"] == "page"
+        assert 0 < cu["peak_in_use_bytes"] <= cu["capacity_bytes"]
+        assert cu["peak_pages_in_use"] > 0
+        assert 0.0 <= cu["fragmentation"] < 1.0
+        assert "cache_utilization" in rep.to_json()
+
+    def test_paged_peak_below_slot_reservation(self):
+        """The memory claim in miniature: heavy-tail outputs in full-size
+        slots leave the slot pool's peak at num_slots x slot_len while the
+        paged pool's peak tracks what was actually written."""
+        wl = WorkloadSpec(num_requests=12, prompt_lens=[5, 9],
+                          max_new_tokens=[3, 7])
+        _, _, cont = _serve(_spec(engine="continuous", slot_len=64,
+                                  workload=wl))
+        _, _, paged = _serve(_spec(slot_len=64, workload=wl,
+                                   cache=CacheSpec(page_size=8)))
+        assert paged.cache_utilization["peak_in_use_bytes"] * 2 \
+            <= cont.cache_utilization["peak_in_use_bytes"]
+
+    def test_eviction_valve_token_identical(self):
+        """A page pool too small for the steady state forces engine-level
+        evictions; victims resume through the scheduler token-identically
+        and no page leaks."""
+        _, _, cont = _serve(_spec(engine="continuous"))
+        ctx, reqs, paged = _serve(
+            _spec(cache=CacheSpec(page_size=8, num_pages=8)))
+        assert paged.preemptions > 0
+        assert _tokens(paged) == _tokens(cont)
+        ctx.engine.pool.check_no_leaks()
+
+    def test_tenant_preemption_no_page_leaks(self):
+        """PR-8-style tenant preemption cycles on the paged engine: shares
+        enforce evict/resume churn, outputs stay token-identical to the
+        continuous engine, pages all come home."""
+        tenants = [TenantSpec(name="gold", share=3.0, priority=1),
+                   TenantSpec(name="bronze", share=1.0)]
+        wl = WorkloadSpec(num_requests=12, prompt_lens=[5, 9, 17],
+                          max_new_tokens=[6, 18],
+                          tenant_mix={"gold": 1.0, "bronze": 1.0})
+        kw = dict(policy="tenant", tenants=tenants, preempt=True)
+        _, _, cont = _serve(_spec(engine="continuous", workload=wl, **kw))
+        ctx, _, paged = _serve(_spec(workload=wl, **kw))
+        assert _tokens(paged) == _tokens(cont)
+        ctx.engine.pool.check_no_leaks()
+        assert ctx.engine.pool.pages_in_use == 0
+
+    def test_rejects_ssm_family(self):
+        spec = _spec()
+        spec = spec.replace(model=ModelSpec(arch="falcon-mamba-7b",
+                                            reduced=True))
+        with pytest.raises(NotImplementedError, match="recurrent state"):
+            build_serve_context(spec)
+
+
+# ----------------------------------------------------- seeded sampling
+
+class TestSampling:
+    SAMP = SamplingSpec(method="sample", temperature=0.9, top_k=50, seed=7)
+
+    def test_same_seed_same_tokens_across_runs(self):
+        _, _, a = _serve(_spec(sampling=self.SAMP))
+        _, _, b = _serve(_spec(sampling=self.SAMP))
+        assert _tokens(a) == _tokens(b)
+
+    def test_sampling_identical_across_engines(self):
+        _, _, cont = _serve(_spec(engine="continuous", sampling=self.SAMP))
+        _, _, paged = _serve(_spec(sampling=self.SAMP))
+        assert _tokens(paged) == _tokens(cont)
+
+    def test_sampling_survives_eviction_resume(self):
+        """The (seed, rid, token_index) keying makes a preempted-and-
+        resumed request replay the same draws an uninterrupted run made."""
+        _, _, smooth = _serve(_spec(sampling=self.SAMP))
+        _, _, churned = _serve(_spec(
+            sampling=self.SAMP, cache=CacheSpec(page_size=8, num_pages=8)))
+        assert churned.preemptions > 0
+        assert _tokens(churned) == _tokens(smooth)
+
+    def test_seed_changes_tokens(self):
+        _, _, a = _serve(_spec(sampling=self.SAMP))
+        _, _, b = _serve(_spec(sampling=SamplingSpec(
+            method="sample", temperature=0.9, top_k=50, seed=8)))
+        assert _tokens(a) != _tokens(b)
+
+    def test_greedy_unaffected_by_sampling_module(self):
+        """Greedy specs keep the fused-argmax path: identical to a spec
+        that never mentions sampling."""
+        _, _, a = _serve(_spec())
+        _, _, b = _serve(_spec(sampling=SamplingSpec(method="greedy",
+                                                     seed=123)))
+        assert _tokens(a) == _tokens(b)
+
+
+# ----------------------------------------------------------- spec layer
+
+class TestSpecs:
+    def test_cache_spec_roundtrip_and_validation(self):
+        spec = _spec(cache=CacheSpec(page_size=8, num_pages=64))
+        again = ServeSpec.from_json(spec.to_json())
+        assert again.cache.page_size == 8
+        assert again.cache.num_pages == 64
+        assert again.resolved_num_pages() == 64
+        with pytest.raises(SpecError):
+            CacheSpec(page_size=0).validate()
+        with pytest.raises(SpecError):
+            CacheSpec(num_pages=0).validate()
+
+    def test_resolved_num_pages_default_matches_slot_capacity(self):
+        spec = _spec(num_slots=4, slot_len=60,
+                     cache=CacheSpec(page_size=16))
+        assert spec.resolved_num_pages() == 4 * 4   # ceil(60/16) per slot
+
+    def test_sampling_spec_validation(self):
+        with pytest.raises(SpecError):
+            SamplingSpec(method="nucleus").validate()
+        with pytest.raises(SpecError):
+            SamplingSpec(temperature=0.0).validate()
+        with pytest.raises(SpecError):
+            SamplingSpec(top_p=1.5).validate()
+
+    def test_verify_requires_greedy(self):
+        spec = _spec(sampling=SamplingSpec(method="sample"))
+        spec = spec.replace(report=spec.report.replace(verify=-1))
+        with pytest.raises(SpecError, match="greedy"):
+            spec.validate()
+
+    def test_paged_pool_must_fit_largest_request(self):
+        spec = _spec(cache=CacheSpec(page_size=8, num_pages=4),
+                     workload=WorkloadSpec(num_requests=4,
+                                           prompt_lens=[33],
+                                           max_new_tokens=[20]))
+        with pytest.raises(SpecError, match="pages"):
+            spec.validate()
