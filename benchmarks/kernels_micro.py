@@ -74,6 +74,27 @@ def run(csv: Csv, quick: bool = False):
     csv.add("paged_attention_ref[jit]", us4,
             f"b={pb};pages_per_row={m};page={psize}")
 
+    # speculative-verify window attention: W=γ+1 query lanes per row in
+    # one pass vs the oracle, then the timed jnp reference vs W separate
+    # decode calls — the batching the speculative engine banks on
+    from repro.kernels.spec_verify import spec_verify
+    w = 5
+    wq = jnp.asarray(rng.normal(size=(pb, w, phq, pd)), jnp.float32)
+    start = jnp.asarray(rng.integers(0, (m - 1) * psize, pb), jnp.int32)
+    q_pos = start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+    sout = spec_verify(wq, kp, vp, table, q_pos, interpret=True)
+    swant = ref.spec_verify_ref(wq, kp, vp, table, q_pos)
+    csv.add("pallas_spec_verify[interpret]", 0.0,
+            f"max_err={float(jnp.abs(sout - swant).max()):.2e}")
+    fsref = jax.jit(ref.spec_verify_ref)
+    us5 = time_us(lambda: jax.block_until_ready(
+        fsref(wq, kp, vp, table, q_pos)), repeat=3)
+    us6 = time_us(lambda: jax.block_until_ready([
+        fref(wq[:, i], kp, vp, table, q_pos[:, i]) for i in range(w)]),
+        repeat=3)
+    csv.add("spec_verify_ref[jit]", us5,
+            f"b={pb};window={w};vs_{w}_decode_calls={us6/us5:.2f}x")
+
 
 if __name__ == "__main__":
     c = Csv()

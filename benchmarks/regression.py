@@ -19,6 +19,12 @@ without letting real regressions through:
   Workload construction is a pure function of the spec, so a changed
   count is a behavior change, not noise.
 
+Speculative decoding adds two more: **rate** (acceptance_rate,
+tokens_per_step — higher is better, 20%: deterministic per trace but
+the band absorbs sweep-shape drift) and **ratio** (spec_speedup —
+higher is better, 25%: a wall-time quotient jitters with numerator and
+denominator both).
+
 Fresh runs are **best-of-N** (direction-aware: max for higher-better,
 min for lower-better, first for exact) so one slow pass cannot fail the
 gate; ``--tol-scale`` widens every band uniformly for known-noisy
@@ -54,6 +60,13 @@ TOLERANCES: Dict[str, Tuple[str, float]] = {
     "throughput": ("higher", 0.15),
     "time": ("lower", 0.50),
     "count": ("exact", 0.0),
+    # speculative-decoding quality: acceptance and tokens/step are pure
+    # functions of the seeded trace + draft config, but the band absorbs
+    # sweep-shape drift (a --smoke regen shares cells, not windows)
+    "rate": ("higher", 0.20),
+    # wall-derived ratios (spec_speedup) jitter with both numerator and
+    # denominator on shared runners — wider than plain throughput
+    "ratio": ("higher", 0.25),
 }
 
 # metric-name suffix → tolerance class (first match wins)
@@ -67,6 +80,9 @@ _SUFFIX_CLASS = [
     ("latency_ms.p95", "time"),
     ("ms_per_step", "time"),
     ("plan_seconds", "time"),
+    ("acceptance_rate", "rate"),
+    ("tokens_per_step", "rate"),
+    ("spec_speedup", "ratio"),
     ("steps", "count"),
     ("decode_tokens", "count"),
     ("prefill_tokens", "count"),
@@ -130,6 +146,16 @@ def extract_metrics(doc: dict) -> Dict[str, float]:
             _put(out, f"{pre}.paged.decode_tokens", pg, "decode_tokens")
             _put(out, f"{pre}.paged.peak_cache_bytes", pg,
                  "peak_cache_bytes")
+            sp = sc.get("speculative", {})
+            _put(out, f"{pre}.speculative.requests_per_s", sp,
+                 "requests_per_s")
+            _put(out, f"{pre}.speculative.decode_tokens", sp,
+                 "decode_tokens")
+            _put(out, f"{pre}.speculative.acceptance_rate", sp,
+                 "speculation", "acceptance_rate")
+            _put(out, f"{pre}.speculative.tokens_per_step", sp,
+                 "speculation", "tokens_per_step")
+            _put(out, f"{pre}.spec_speedup", sc, "spec_speedup")
     elif bench == "train_scaling":
         for sw in doc.get("sweeps", []):
             pre = f"train.ways{sw['ways']}"

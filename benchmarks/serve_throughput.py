@@ -13,6 +13,13 @@ through both registered engines:
 * **continuous** — ``engine.name=continuous`` (repro.runtime): fixed decode
   token budget, slot-pooled KV cache, requests admitted/retired mid-flight.
 
+Two more cells ride on the paged pool: **paged** (``engine.name=paged``,
+page-granular KV allocation — the peak-memory claim) and **speculative**
+(``engine.name=speculative``, a truncated-layer draft proposing
+``--gamma`` lookahead tokens per window, verified in one batched target
+step — reported as ``acceptance_rate``, ``tokens_per_step``, and
+``spec_speedup`` vs the paged engine on the same trace).
+
 Each engine gets one untimed warmup pass (compile cache, engine reused via
 a prebuilt ServeContext) before two timed passes (best-of-2). ``--verify N``
 additionally checks that the continuous engine's greedy outputs are
@@ -52,7 +59,7 @@ SMOKE_MAX_NEWS = [2, 6]
 
 
 def scenario_spec(base: api.ServeSpec, engine: str, n: int, budget: int,
-                  seed: int) -> api.ServeSpec:
+                  seed: int, extra=()) -> api.ServeSpec:
     """One sweep cell: the base spec at queue depth ``n``."""
     return api.apply_overrides(base, [
         f"engine.name={engine}",
@@ -60,7 +67,7 @@ def scenario_spec(base: api.ServeSpec, engine: str, n: int, budget: int,
         f"workload.seed={seed + n}",
         f"admission.token_budget={budget}",
         "report.verify=0",          # verification runs once, post-sweep
-    ])
+    ] + list(extra))
 
 
 def best_of_2(spec: api.ServeSpec):
@@ -156,6 +163,12 @@ def main():
     ap.add_argument("--policy", default="ljf", choices=["fifo", "ljf"],
                     help="continuous admission order (ljf = longest job "
                          "first, maximizes tail occupancy)")
+    ap.add_argument("--draft-layers", type=int, default=1,
+                    help="speculative cell: truncated-layer draft depth "
+                         "(draft.num_layers)")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="speculative cell: lookahead tokens per draft "
+                         "window (draft.gamma)")
     ap.add_argument("--verify", type=int, default=8,
                     help="check N continuous outputs against single-request "
                          "decoding (-1 = all, 0 = skip)")
@@ -205,6 +218,10 @@ def main():
             scenario_spec(base, "continuous", n, budget, args.seed))
         pctx, paged = best_of_2(
             scenario_spec(base, "paged", n, budget, args.seed))
+        sctx, spec_r = best_of_2(
+            scenario_spec(base, "speculative", n, budget, args.seed,
+                          extra=[f"draft.num_layers={args.draft_layers}",
+                                 f"draft.gamma={args.gamma}"]))
         static = static_json(st_report)
         speedup = (cont.requests_per_s / static["requests_per_s"]
                    if static["requests_per_s"] else float("inf"))
@@ -213,26 +230,39 @@ def main():
         cont_peak = cont.cache_utilization["peak_in_use_bytes"]
         paged_peak = paged.cache_utilization["peak_in_use_bytes"]
         mem_win = cont_peak / paged_peak if paged_peak else float("inf")
+        # the speculative claim: same trace, same pool, more than one
+        # token per accepted window — report acceptance and the wall win
+        spec_speedup = (spec_r.requests_per_s / paged.requests_per_s
+                        if paged.requests_per_s else float("inf"))
+        sj = continuous_json(spec_r)
         scenario = {"queued": n, "budget": budget,
                     "static": static, "continuous": continuous_json(cont),
                     "paged": continuous_json(paged),
+                    "speculative": sj,
                     "speedup_requests_per_s": round(speedup, 2),
-                    "paged_vs_continuous_peak_bytes": round(mem_win, 2)}
+                    "paged_vs_continuous_peak_bytes": round(mem_win, 2),
+                    "spec_speedup": round(spec_speedup, 2)}
 
         if n == max(args.queued) and args.verify:
             audit = api.verify_report(cont, ctx, n=args.verify)
             scenario["verified_token_identical"] = audit
             paudit = api.verify_report(paged, pctx, n=args.verify)
             scenario["paged_verified_token_identical"] = paudit
+            saudit = api.verify_report(spec_r, sctx, n=args.verify)
+            scenario["speculative_verified_token_identical"] = saudit
             print(f"verify[{n} queued]: {audit['checked']} continuous + "
-                  f"{paudit['checked']} paged requests vs single-request "
-                  f"decode — OK")
+                  f"{paudit['checked']} paged + {saudit['checked']} "
+                  f"speculative requests vs single-request decode — OK")
 
         scenarios.append(scenario)
+        sp = sj["speculation"]
         print(f"queued={n:4d}  static {static['requests_per_s']:8.2f} req/s"
               f"  continuous {cont.requests_per_s:8.2f} req/s"
               f"  paged {paged.requests_per_s:8.2f} req/s"
-              f"  speedup {speedup:5.2f}x  kv-peak {mem_win:5.2f}x lower")
+              f"  speculative {spec_r.requests_per_s:8.2f} req/s"
+              f"  speedup {speedup:5.2f}x  kv-peak {mem_win:5.2f}x lower"
+              f"  accept {sp['acceptance_rate']:.3f}"
+              f"  tok/step {sp['tokens_per_step']:.2f}")
 
     result = {"bench": "serve_throughput", "arch": ctx.engine.cfg.name,
               "reduced": base.model.reduced, "seed": args.seed,

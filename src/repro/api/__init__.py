@@ -28,16 +28,17 @@ from repro.api.registry import (ProtocolStrategy, StepItem,
                                 register_scheduler_policy)
 from repro.api.runner import (build_context, build_data, build_model,
                               build_optimizer, default_callbacks, run)
-from repro.api.serving import (ServeContext, build_serve_context,
-                               build_workload, restore_params, run_serve,
-                               verify_report)
+from repro.api.serving import (ServeContext, audit_stream,
+                               build_serve_context, build_workload,
+                               restore_params, run_serve, verify_report)
 from repro.api.specs import (AdmissionSpec, ArrivalSpec, CacheSpec,
-                             ClockSpec, DataSpec, EngineSpec, EvalSpec,
-                             ExecutionSpec, ExperimentSpec, ModelSpec,
-                             ObsSpec, OptimizerSpec, ProtocolSpec,
-                             ReportSpec, SamplerSpec, SamplingSpec,
-                             SchedulerSpec, ServeSpec, SpecError,
-                             StragglerSpec, TenantSpec, WorkloadSpec)
+                             ClockSpec, DataSpec, DraftSpec, EngineSpec,
+                             EvalSpec, ExecutionSpec, ExperimentSpec,
+                             ModelSpec, ObsSpec, OptimizerSpec,
+                             ProtocolSpec, ReportSpec, SamplerSpec,
+                             SamplingSpec, SchedulerSpec, ServeSpec,
+                             SpecError, StragglerSpec, StreamSpec,
+                             TenantSpec, WorkloadSpec)
 
 __all__ = [
     "ExperimentSpec", "ModelSpec", "OptimizerSpec", "DataSpec",
@@ -45,11 +46,11 @@ __all__ = [
     "ObsSpec", "StragglerSpec", "SpecError",
     "ServeSpec", "EngineSpec", "AdmissionSpec", "SchedulerSpec",
     "WorkloadSpec", "ClockSpec", "ReportSpec", "TenantSpec", "ArrivalSpec",
-    "CacheSpec", "SamplingSpec",
+    "CacheSpec", "SamplingSpec", "DraftSpec", "StreamSpec",
     "run", "fit", "build_context", "build_data", "build_model",
     "build_optimizer", "default_callbacks",
     "run_serve", "build_serve_context", "build_workload", "ServeContext",
-    "restore_params", "verify_report",
+    "restore_params", "verify_report", "audit_stream",
     "register_protocol", "get_protocol", "available_protocols",
     "register_scheduler_policy", "get_scheduler_policy",
     "available_scheduler_policies",

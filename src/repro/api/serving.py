@@ -129,12 +129,15 @@ def build_serve_context(spec: ServeSpec, params=None) -> ServeContext:
 
 
 def verify_report(report, ctx: ServeContext, requests=None,
-                  n: int = -1) -> dict:
+                  n: int = -1, stream_events=None) -> dict:
     """Check served outputs token-identical to single-request decoding.
 
     ``n`` limits how many requests are replayed through
-    ``reference_generate`` (-1 = all). Raises RuntimeError listing the
-    diverging rids; returns the audit dict recorded on the report.
+    ``reference_generate`` (-1 = all). When the run streamed
+    (``stream_events`` from the engine's ``on_token`` hook), the stream
+    order is additionally audited against the final token order. Raises
+    RuntimeError listing the diverging rids; returns the audit dict
+    recorded on the report.
     """
     from repro.runtime.engine import reference_generate
     if requests is None:
@@ -152,7 +155,38 @@ def verify_report(report, ctx: ServeContext, requests=None,
         raise RuntimeError(
             f"{report.engine} outputs diverge from single-request "
             f"decoding: rids {mismatches}")
-    return {"checked": k, "mismatches": []}
+    out = {"checked": k, "mismatches": []}
+    if stream_events is not None:
+        out["stream"] = audit_stream(report, stream_events)
+    return out
+
+
+def audit_stream(report, events) -> dict:
+    """Stream order == final token order, per request.
+
+    ``events`` are ``on_token`` emissions ``{"rid", "idx", "tok",
+    "t_s"}`` in emission order. Every request's streamed token sequence
+    must equal its report ``tokens`` list exactly (same tokens, same
+    order, contiguous indices) — speculative bursts and plain decode
+    emit through the same path, so this pins that path. Raises
+    RuntimeError on divergence; returns the audit dict.
+    """
+    streamed: dict = {}
+    for ev in events:
+        seq = streamed.setdefault(ev["rid"], [])
+        if ev["idx"] != len(seq):
+            raise RuntimeError(
+                f"stream emitted rid {ev['rid']} token index "
+                f"{ev['idx']} out of order (expected {len(seq)})")
+        seq.append(ev["tok"])
+    bad = [r["rid"] for r in report.per_request
+           if streamed.get(r["rid"], []) != r["tokens"]]
+    if bad:
+        raise RuntimeError(
+            f"streamed token order diverges from the report for rids "
+            f"{bad}")
+    return {"events": len(events), "requests": len(streamed),
+            "mismatches": []}
 
 
 def run_serve(spec: ServeSpec, ctx: Optional[ServeContext] = None):
@@ -169,6 +203,11 @@ def run_serve(spec: ServeSpec, ctx: Optional[ServeContext] = None):
     enqueue→admit→prefill→decode→complete lifecycle spans. Artifacts go
     to ``spec.obs.trace_path`` / ``events_path``; instrumentation changes
     no served token.
+
+    Streaming (``spec.stream``): the engine's ``on_token`` hook collects
+    every emission in order; ``stream.path`` gets them as JSONL
+    (``{"rid", "idx", "tok", "t_s"}`` per line) and ``audit_stream``
+    checks stream order equals the final per-request token order.
     """
     if ctx is None:
         ctx = build_serve_context(spec)
@@ -185,12 +224,27 @@ def run_serve(spec: ServeSpec, ctx: Optional[ServeContext] = None):
             meta={"kind": "serve", "engine": spec.engine.name,
                   "clock": spec.clock.kind})
     requests = build_workload(spec, ctx.engine.cfg.vocab_size)
-    with maybe_jax_profiler(obs):
-        report = ctx.engine.serve(requests, spec, clock=clock,
-                                  tracer=tracer)
+    stream = getattr(spec, "stream", None)
+    events: Optional[List[dict]] = None
+    if stream is not None and stream.enabled:
+        events = []
+        ctx.engine.on_token = lambda rid, idx, tok, t_s: events.append(
+            {"rid": rid, "idx": idx, "tok": tok, "t_s": round(t_s, 6)})
+    try:
+        with maybe_jax_profiler(obs):
+            report = ctx.engine.serve(requests, spec, clock=clock,
+                                      tracer=tracer)
+    finally:
+        ctx.engine.on_token = None
+    if events is not None:
+        if stream.path:
+            pathlib.Path(stream.path).write_text(
+                "".join(json.dumps(ev) + "\n" for ev in events))
+        report.stream = audit_stream(report, events)
     if spec.report.verify:
         report.verified = verify_report(report, ctx, requests=requests,
-                                        n=spec.report.verify)
+                                        n=spec.report.verify,
+                                        stream_events=events)
     if tracer is not None:
         tracer.record("serve_report", **{
             k: v for k, v in report.to_json().items()

@@ -609,6 +609,66 @@ class SamplingSpec(SpecBase):
 
 
 @dataclasses.dataclass(frozen=True)
+class DraftSpec(SpecBase):
+    """Draft model for the ``speculative`` engine (repro.runtime.spec_decode).
+
+    The draft proposes ``gamma`` lookahead tokens per active request;
+    one batched target step then verifies the whole window. Exactly one
+    of two draft sources must be set:
+
+    * ``num_layers`` — a truncated-layer view of the target: the draft
+      reuses the target's first N layers (and embeddings/head), so for
+      every verified token its per-layer KV is *identical* to the
+      target's and the draft attends straight over the target's pages —
+      the fork shares physical KV, not just table entries. N equal to
+      the target's depth is the self-draft degenerate case (100%
+      acceptance; useful for tests).
+    * ``arch`` — a configs entry served as an independent draft model
+      (same vocab required; own page buffers over the same page-id
+      space, params from ``seed``).
+    """
+    arch: Optional[str] = None
+    num_layers: Optional[int] = None
+    gamma: int = 4
+    reduced: bool = True
+    seed: int = 0
+
+    @property
+    def configured(self) -> bool:
+        return self.arch is not None or self.num_layers is not None
+
+    def validate(self) -> "DraftSpec":
+        self._require(self.gamma >= 1, "draft.gamma must be >= 1")
+        self._require(not (self.arch is not None
+                           and self.num_layers is not None),
+                      "draft.arch and draft.num_layers are exclusive "
+                      "draft sources; set one")
+        self._require(self.num_layers is None or self.num_layers >= 1,
+                      "draft.num_layers must be >= 1 (or null)")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec(SpecBase):
+    """Token streaming surface (engine ``on_token`` hook; api/serving.py).
+
+    When enabled, every engine emission — the prefill's first token,
+    plain decode steps, and accepted speculative bursts alike — flows
+    through one per-token hook: instants land on the request's obs
+    track, ``path`` (optional) collects a JSONL stream sink, and
+    ``verify_report`` audits that stream order equals the final
+    per-request token order.
+    """
+    enabled: bool = False
+    path: Optional[str] = None
+
+    def validate(self) -> "StreamSpec":
+        self._require(self.path is None or self.enabled,
+                      "stream.path needs stream.enabled=true")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
 class ClockSpec(SpecBase):
     """Scheduler clock: "wall" (real time, idle waits sleep) or "virtual"
     (deterministic tick per engine operation — replayable tests)."""
@@ -659,6 +719,8 @@ class ServeSpec(SpecBase):
     cache: CacheSpec = dataclasses.field(default_factory=CacheSpec)
     sampling: SamplingSpec = dataclasses.field(
         default_factory=SamplingSpec)
+    draft: DraftSpec = dataclasses.field(default_factory=DraftSpec)
+    stream: StreamSpec = dataclasses.field(default_factory=StreamSpec)
     clock: ClockSpec = dataclasses.field(default_factory=ClockSpec)
     report: ReportSpec = dataclasses.field(default_factory=ReportSpec)
     obs: ObsSpec = dataclasses.field(default_factory=ObsSpec)
@@ -689,8 +751,8 @@ class ServeSpec(SpecBase):
         self._require(self.kind == "serve",
                       f"kind must be 'serve', got {self.kind!r}")
         for sub in (self.model, self.engine, self.admission, self.scheduler,
-                    self.workload, self.cache, self.sampling, self.clock,
-                    self.report, self.obs):
+                    self.workload, self.cache, self.sampling, self.draft,
+                    self.stream, self.clock, self.report, self.obs):
             sub.validate()
         self._require(self.model.arch != "paper-cnn",
                       "serving needs a decoder LM arch, not the "
@@ -733,7 +795,7 @@ class ServeSpec(SpecBase):
         if self.engine.name == "static":
             self._require(self.sampling.method == "greedy",
                           "the static engine decodes greedily only")
-        if self.engine.name == "paged":
+        if self.engine.name in ("paged", "speculative"):
             worst = (max(self.workload.prompt_lens)
                      + max(self.workload.max_new_tokens))
             self._require(
@@ -741,4 +803,9 @@ class ServeSpec(SpecBase):
                 f"paged pool too small: num_pages*page_size must cover one "
                 f"worst-case request ({worst} tokens), or eviction can "
                 f"never free enough pages to finish it")
+        if self.engine.name == "speculative":
+            self._require(self.draft.configured,
+                          "the speculative engine needs a draft source: "
+                          "set draft.num_layers (truncated-layer view) or "
+                          "draft.arch (configs entry)")
         return self

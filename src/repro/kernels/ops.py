@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.paged_attention import paged_attention as _paged_attention
+from repro.kernels.spec_verify import spec_verify as _spec_verify
 from repro.kernels.ssm_scan import ssm_scan
 from repro.kernels.cross_entropy import fused_cross_entropy
 
@@ -51,6 +52,16 @@ def paged_attention(q, k_pages, v_pages, page_table, pos, *,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def spec_verify(q, k_pages, v_pages, page_table, q_pos, *,
+                interpret: bool = True):
+    """Speculative-verify window attention; shapes as in
+    repro.kernels.ref.spec_verify_ref. q: (B, W, Hq, D); k_pages/v_pages:
+    (NP, P, Hkv, D); page_table: (B, M) int32; q_pos: (B, W) int32."""
+    return _spec_verify(q, k_pages, v_pages, page_table, q_pos,
+                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
 def selective_scan(x, dt, a, bmat, cmat, *, interpret: bool = True):
     """Mamba1 recurrence; shapes as in repro.kernels.ref.ssm_scan_ref."""
     bl = _pick_block(x.shape[1], 64)
@@ -71,5 +82,6 @@ def cross_entropy(hidden, w_vocab, labels, *, interpret: bool = True):
 # re-export oracles for convenience
 attention_ref = ref.attention_ref
 paged_attention_ref = ref.paged_attention_ref
+spec_verify_ref = ref.spec_verify_ref
 selective_scan_ref = ref.ssm_scan_ref
 cross_entropy_ref = ref.cross_entropy_ref

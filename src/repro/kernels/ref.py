@@ -72,6 +72,41 @@ def paged_attention_ref(q, k_pages, v_pages, page_table,
     return out.astype(q.dtype)
 
 
+def spec_verify_ref(q, k_pages, v_pages, page_table, q_pos) -> jnp.ndarray:
+    """Naive speculative-verify window attention: gather pages, then one
+    dense softmax over W queries per request.
+
+    Scores the whole draft window (the last accepted token plus γ draft
+    proposals) against paged KV in one pass: query ``i`` of row ``b``
+    sits at absolute position ``q_pos[b, i]`` and attends key positions
+    ``0..q_pos[b, i]`` inclusive — in-window drafts see the drafts
+    before them but never the ones after. With W == 1 and
+    ``q_pos = pos[:, None]`` this is exactly
+    :func:`paged_attention_ref`.
+
+    q: (B, W, Hq, D); k_pages, v_pages: (NP, P, Hkv, D);
+    page_table: (B, M) int32; q_pos: (B, W) int32. Returns (B, W, Hq, D).
+    """
+    b, w, hq, d = q.shape
+    psize, hkv = k_pages.shape[1], k_pages.shape[2]
+    m = page_table.shape[1]
+    rep = hq // hkv
+    k = k_pages[page_table].reshape(b, m * psize, hkv, d)
+    v = v_pages[page_table].reshape(b, m * psize, hkv, d)
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bwhd,bkhd->bwhk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(m * psize)[None, None, :] <= q_pos[:, :, None]
+    scores = jnp.where(valid[:, :, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bwhk,bkhd->bwhd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
 def ssm_scan_ref(x, dt, a, bmat, cmat, h0=None):
     """Sequential mamba1-style selective scan (the recurrence ground truth).
 

@@ -16,6 +16,8 @@ Usage:
       --set scheduler.policy=ljf --set workload.num_requests=64
   ... --static            # static-batch A/B engine (engine.name=static)
   ... --no-reduced        # full-size architecture
+  ... --speculative --draft-layers 2 --gamma 4   # speculative decoding
+  ... --stream tokens.jsonl                      # token streaming sink
 """
 from __future__ import annotations
 
@@ -48,8 +50,17 @@ def _legacy_overrides(args) -> List[str]:
         add("engine.name", "static")
     if args.paged:
         add("engine.name", "paged")
+    if args.speculative:
+        add("engine.name", "speculative")
     add("cache.page_size", args.page_size)
     add("cache.num_pages", args.num_pages)
+    add("draft.num_layers", args.draft_layers)
+    add("draft.arch", args.draft_arch)
+    add("draft.gamma", args.gamma)
+    if args.stream is not None:
+        add("stream.enabled", "true")
+        if args.stream:
+            add("stream.path", args.stream)
     add("sampling.method", "sample" if args.sample else None)
     add("sampling.temperature", args.temperature)
     add("sampling.top_k", args.top_k)
@@ -98,6 +109,25 @@ def main(argv=None):
                     help="paged engine: physical page count "
                          "(cache.num_pages; default matches the slot "
                          "pool's worst-case capacity)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="draft-model speculative decoding on the paged "
+                         "pool (engine.name=speculative; needs a draft "
+                         "source: --draft-layers or --draft-arch)")
+    ap.add_argument("--draft-layers", type=int, default=None,
+                    metavar="N",
+                    help="truncated-layer draft: reuse the target's "
+                         "first N layers (draft.num_layers)")
+    ap.add_argument("--draft-arch", default=None, metavar="ARCH",
+                    help="independent draft model from the configs "
+                         "registry, same vocab (draft.arch)")
+    ap.add_argument("--gamma", type=int, default=None,
+                    help="speculative lookahead tokens per draft window "
+                         "(draft.gamma)")
+    ap.add_argument("--stream", nargs="?", const="", default=None,
+                    metavar="JSONL",
+                    help="stream every emitted token through the "
+                         "on_token hook (stream.enabled); with a path, "
+                         "also write the JSONL sink (stream.path)")
     ap.add_argument("--sample", action="store_true",
                     help="seeded stochastic sampling instead of greedy "
                          "(sampling.method=sample; keyed by request id + "

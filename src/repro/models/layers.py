@@ -399,6 +399,40 @@ def paged_decode_attention(q, k_pages, v_pages, page_table,
     return decode_attention(q, kc, vc, pos, window=None)
 
 
+def paged_window_attention(q, k_pages, v_pages, page_table,
+                           q_pos) -> jnp.ndarray:
+    """W-query speculative-window attention over a paged KV cache.
+
+    q: (B, W, Hq, hd); pages: (NP, P, Hc, hd); page_table: (B, M) int32;
+    q_pos: (B, W) int32 — the absolute position of each of the row's W
+    window tokens (the speculative engine passes pos, pos+1, …, pos+γ;
+    lanes past a row's window length point at a scratch position whose
+    output is discarded). Key position k is visible to query i iff
+    ``k <= q_pos[b, i]`` — for W == 1 this is exactly
+    :func:`decode_attention`'s ``idx < pos + 1`` mask, so a one-token
+    window reproduces plain paged decode bit-for-bit. The Pallas window
+    kernel (repro.kernels.spec_verify) computes the same quantity
+    blockwise for the accelerator path.
+    """
+    b, w, hq, hd = q.shape
+    psize, hc = k_pages.shape[1], k_pages.shape[2]
+    m = page_table.shape[1]
+    rep = hq // hc
+    scale = 1.0 / math.sqrt(hd)
+    kc = k_pages[page_table].reshape(b, m * psize, hc, hd)
+    vc = v_pages[page_table].reshape(b, m * psize, hc, hd)
+    qr = q.reshape(b, w, hc, rep, hd)
+    s = jnp.einsum("bqhrd,bkhd->bqhrk", qr, kc,
+                   preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(m * psize)
+    valid = idx[None, None, :] <= q_pos[:, :, None]          # (B, W, K)
+    s = jnp.where(valid[:, :, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bqhrk,bkhd->bqhrd", p.astype(vc.dtype), vc,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype).reshape(b, w, hq, hd)
+
+
 # ---------------------------------------------------------------------------
 # Attention block (params + apply)
 # ---------------------------------------------------------------------------

@@ -248,6 +248,40 @@ class _Blocks:
             y = L.mlp_apply(p["mlp"], hn2)
         return x + y, {"k": kc, "v": vc}
 
+    def attn_block_decode_window_paged(self, p, x, cache, q_pos,
+                                       page_table):
+        """Speculative-window decode over a paged KV cache.
+
+        Like :meth:`attn_block_decode_paged` but for W tokens per row at
+        absolute positions ``q_pos`` (B, W): each position's kv is
+        scattered to physical page ``table[b, q_pos // P]`` at offset
+        ``q_pos % P`` (the engine pre-reserves the window's pages on the
+        forked table; lanes past a row's window length carry a q_pos
+        that resolves to a scratch column), then every query attends
+        causally over the row's pages — key position k is visible to
+        query i iff ``k <= q_pos[b, i]``, so in-window drafts see the
+        drafts before them but never the ones after.
+        """
+        cfg = self.cfg
+        b, w = x.shape[0], x.shape[1]
+        hn = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+        q, k, v = L.attention_qkv(p["attn"], hn, cfg, q_pos)
+        kc, vc = cache["k"], cache["v"]
+        k_rep, v_rep = self._repeat_kv(k), self._repeat_kv(v)
+        psize = kc.shape[1]
+        pages = jnp.take_along_axis(page_table, q_pos // psize, axis=1)
+        offs = q_pos % psize                                  # (B, W)
+        kc = kc.at[pages, offs].set(k_rep)
+        vc = vc.at[pages, offs].set(v_rep)
+        attn_out = L.paged_window_attention(q, kc, vc, page_table, q_pos)
+        x = x + attn_out.reshape(b, w, -1) @ p["attn"]["wo"]
+        hn2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, _ = L.moe_apply(p["moe"], hn2, cfg)
+        else:
+            y = L.mlp_apply(p["mlp"], hn2)
+        return x + y, {"k": kc, "v": vc}
+
     def ssm_block_decode(self, p, x, cache):
         cfg = self.cfg
         hn = L.rms_norm(x, p["norm"], cfg.norm_eps)
@@ -730,6 +764,48 @@ class LanguageModel:
         srv = params["server"]
         x, new_cache["server"] = self._decode_stack_paged(
             srv["blocks"], cache["server"], x, pos, page_table)
+        x = L.rms_norm(x, srv["final_norm"], cfg.norm_eps)
+        logits = (x @ self._lm_head(params)).astype(jnp.float32)
+        return logits, new_cache
+
+    def _decode_window_stack_paged(self, stacked_params, stacked_cache, x,
+                                   q_pos, page_table):
+        def body(xx, inp):
+            lp, lc = inp
+            xx, nc = self.blocks.attn_block_decode_window_paged(
+                lp, xx, lc, q_pos, page_table)
+            return xx, nc
+        return scan_stack(self.cfg, body, x, stacked_params, stacked_cache)
+
+    def decode_window_paged(self, params, cache, tokens, q_pos, page_table):
+        """W-token speculative-verify decode over a paged KV cache.
+
+        tokens: (B, W) int32 — per row, the last emitted token followed
+        by the draft's W-1 proposals; q_pos: (B, W) int32 absolute
+        positions (``pos + i`` inside a row's window; lanes beyond it
+        point at a scratch column of ``page_table``); page_table:
+        (B, M) int32. One batched target step scores the whole window:
+        logits[:, i] is the next-token distribution after consuming
+        ``tokens[:, :i+1]``, and every window position's kv lands in the
+        paged cache exactly where a sequence of W single-token
+        :meth:`decode_step_paged` calls would have put it — so the
+        accept-prefix state after speculative verification is
+        indistinguishable from plain decode. Attention-cache families
+        only, as for single-token paged decode.
+
+        Returns (logits (B, W, V) float32, new_cache)."""
+        cfg = self.cfg
+        if cfg.family in ("ssm", "hybrid"):
+            raise NotImplementedError(
+                "paged decode supports attention-cache families only")
+        x = params["client"]["embed"][tokens]
+        new_cache = dict(cache)
+        x, new_cache["client"] = self._decode_window_stack_paged(
+            params["client"]["blocks"], cache["client"], x, q_pos,
+            page_table)
+        srv = params["server"]
+        x, new_cache["server"] = self._decode_window_stack_paged(
+            srv["blocks"], cache["server"], x, q_pos, page_table)
         x = L.rms_norm(x, srv["final_norm"], cfg.norm_eps)
         logits = (x @ self._lm_head(params)).astype(jnp.float32)
         return logits, new_cache

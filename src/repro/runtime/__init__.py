@@ -10,7 +10,9 @@ position — in one device call. See docs/serving.md.
 Every pluggable piece registers with :mod:`repro.api.registry` as an import
 side effect of this package: engines ``"continuous"``
 (:class:`ContinuousEngine`), ``"paged"`` (:class:`PagedEngine`, page-table
-KV allocation — see repro.runtime.paging), and ``"static"``
+KV allocation — see repro.runtime.paging), ``"speculative"``
+(:class:`SpeculativeEngine`, draft-model speculative decoding over forked
+page tables — see repro.runtime.spec_decode), and ``"static"``
 (:class:`BatchedServer`), scheduler policies ``"fifo"``/``"ljf"``, and the
 ``"budget"`` admission controller — all reachable by name from a
 declarative ``ServeSpec`` (``repro.api.run``).
@@ -19,6 +21,7 @@ from repro.runtime.engine import (ContinuousEngine, ServeReport,
                                   reference_generate)
 from repro.runtime.kvcache import KVCachePool
 from repro.runtime.paging import PagedEngine, PagePool
+from repro.runtime.spec_decode import SpeculativeEngine
 from repro.runtime.queue import (AdmissionController, RequestQueue,
                                  ServeRequest, TenantAdmissionController,
                                  apportion)
@@ -33,6 +36,7 @@ from repro.runtime.workload import (bursty_arrivals, diurnal_arrivals,
 __all__ = ["AdmissionController", "BatchedServer", "ContinuousEngine",
            "KVCachePool", "PagePool", "PagedEngine", "Request",
            "RequestQueue", "Scheduler", "ServeReport", "ServeRequest",
+           "SpeculativeEngine",
            "TenantAdmissionController", "TokenSampler", "VirtualClock",
            "WallClock", "apportion", "bursty_arrivals", "diurnal_arrivals",
            "generate_arrivals", "heavy_tail_arrivals", "make_clock",

@@ -34,6 +34,7 @@ from repro.api.registry import register_engine
 from repro.models import build_model
 from repro.obs.metrics import (MetricsRegistry, group_percentiles,
                                percentiles)
+from repro.obs.trace import null_tracer
 from repro.runtime.kvcache import KVCachePool
 from repro.runtime.queue import ServeRequest
 
@@ -95,6 +96,12 @@ class ServeReport:
     # utilization, fragmentation — the slot-pooled vs paged memory story
     # as a measured report field, not an assertion (docs/serving.md).
     cache_utilization: Optional[Dict[str, Any]] = None
+    # speculative engine only: windows/proposed/accepted counters,
+    # acceptance_rate, tokens_per_step (docs/serving.md).
+    speculation: Optional[Dict[str, Any]] = None
+    # streaming run only: per-token emission audit (stream order ==
+    # final token order, checked in repro.api.serving.audit_stream).
+    stream: Optional[Dict[str, Any]] = None
 
     @property
     def requests_per_s(self) -> float:
@@ -138,6 +145,10 @@ class ServeReport:
             out["tenant_shares"] = self.tenant_shares
         if self.cache_utilization is not None:
             out["cache_utilization"] = self.cache_utilization
+        if self.speculation is not None:
+            out["speculation"] = self.speculation
+        if self.stream is not None:
+            out["stream"] = self.stream
         if self.verified is not None:
             out["verified"] = self.verified
         return out
@@ -202,6 +213,12 @@ class ContinuousEngine:
         self.steps = 0
         self.decode_tokens = 0
         self.prefill_tokens = 0
+        # Streaming surface: every generated token funnels through
+        # _emit_token, so a consumer set here observes tokens in exactly
+        # the order the final report carries them — for plain decode and
+        # speculative bursts alike (docs/serving.md).
+        self.on_token = None           # callable(rid, idx, tok, t_s)
+        self._tracer = null_tracer()   # rebound by serve()
 
     # subclass hooks ------------------------------------------------------
     @staticmethod
@@ -280,6 +297,7 @@ class ContinuousEngine:
         if self.steps or self.records:
             self.reset()
         sched = Scheduler.from_spec(self, spec, clock=clock, tracer=tracer)
+        self._tracer = sched.tracer    # per-token instants on request tracks
         return sched.run(requests)
 
     def reset(self) -> None:
@@ -393,7 +411,7 @@ class ContinuousEngine:
                 # last-position argmax is exactly the token an
                 # uninterrupted decode would have produced next. Append
                 # to the original record — arrival/TTFT stamps stay.
-                rec["tokens"].append(first)
+                self._emit_token(req.rid, first, t)
             else:
                 rec = {"rid": req.rid, "prompt_len": plen,
                        "max_new_tokens": req.max_new_tokens,
@@ -402,8 +420,9 @@ class ContinuousEngine:
                        "admit_s": t, "first_token_s": t, "done_s": None,
                        "tenant": req.tenant, "preemptions": 0,
                        "prompt": np.asarray(req.prompt),
-                       "tokens": [first]}
+                       "tokens": []}
                 self.records[req.rid] = rec
+                self._emit_token(req.rid, first, t)
             if len(rec["tokens"]) >= rec["max_new_tokens"]:
                 rec["done_s"] = t
                 continue
@@ -424,6 +443,23 @@ class ContinuousEngine:
         if rec is not None and rec.get("resume_pending"):
             return len(rec["tokens"])
         return 0
+
+    def _emit_token(self, rid: int, tok: int, t: float) -> None:
+        """The single token-emission path: record append + stream hook.
+
+        Prefill first-tokens, per-step decode tokens, and speculative
+        bursts all land here, so the ``on_token`` consumer and the
+        per-token trace instants observe exactly the order (and values)
+        the final report's ``tokens`` lists carry.
+        """
+        rec = self.records[rid]
+        idx = len(rec["tokens"])
+        rec["tokens"].append(tok)
+        if self.on_token is not None:
+            self.on_token(rid, idx, tok, t)
+        if self._tracer.enabled:
+            self._tracer.instant("token", cat="request", ts_s=t, rid=rid,
+                                 idx=idx, tok=tok)
 
     def preempt(self, rid: int) -> Dict[str, Any]:
         """Evict an in-flight request: free its KV slot, keep its record.
@@ -484,7 +520,7 @@ class ContinuousEngine:
         finished: List[int] = []
         for slot in np.flatnonzero(active):
             rid = int(self._rid[slot])
-            self.records[rid]["tokens"].append(int(nxt[slot]))
+            self._emit_token(rid, int(nxt[slot]), t)
             self._tok[slot] = nxt[slot]
             self.pool.pos[slot] += 1
             self._remaining[slot] -= 1

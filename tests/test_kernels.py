@@ -109,6 +109,88 @@ def test_paged_attention_sweep(dtype, b, hq, hkv, d, psize, m):
                                np.asarray(want, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("b,w,hq,hkv,d,psize,m", [
+    (3, 4, 4, 4, 64, 16, 5),    # MHA
+    (2, 5, 8, 2, 64, 8, 4),     # GQA 4:1
+    (4, 3, 8, 1, 32, 16, 3),    # MQA
+])
+def test_spec_verify_sweep(dtype, b, w, hq, hkv, d, psize, m):
+    from repro.kernels.spec_verify import spec_verify
+    rng = np.random.default_rng(8)
+    num_pages = b * m + 2
+    q = jnp.asarray(rng.normal(size=(b, w, hq, d)), dtype)
+    k_pages = jnp.asarray(rng.normal(size=(num_pages, psize, hkv, d)),
+                          dtype)
+    v_pages = jnp.asarray(rng.normal(size=(num_pages, psize, hkv, d)),
+                          dtype)
+    table = jnp.asarray(
+        rng.permutation(num_pages)[:b * m].reshape(b, m), jnp.int32)
+    # window positions advance by one per lane; rows start mid-page, at
+    # a page boundary, and deep enough that the window spans pages
+    start = jnp.asarray(rng.integers(0, (m - 1) * psize, b), jnp.int32)
+    start = start.at[0].set(psize - 1).at[-1].set(0)
+    q_pos = start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+    got = spec_verify(q, k_pages, v_pages, table, q_pos, interpret=True)
+    want = ref.spec_verify_ref(q, k_pages, v_pages, table, q_pos)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_spec_verify_window_causality():
+    """Lane i of the window attends to the full history plus drafts
+    0..i-1 but never a later draft: appending garbage keys beyond a
+    lane's position must not change that lane's output."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(9)
+    b, w, hq, hkv, d, psize, m = 2, 4, 4, 2, 32, 8, 3
+    num_pages = b * m
+    q = jnp.asarray(rng.normal(size=(b, w, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(num_pages, psize, hkv, d)),
+                    jnp.float32)
+    v = jnp.asarray(rng.normal(size=(num_pages, psize, hkv, d)),
+                    jnp.float32)
+    table = jnp.asarray(np.arange(num_pages).reshape(b, m), jnp.int32)
+    start = jnp.asarray([5, 8], jnp.int32)
+    q_pos = start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+    base = ops.spec_verify(q, k, v, table, q_pos, interpret=True)
+    # corrupt every key/value strictly beyond each row's LAST lane: no
+    # lane may see them
+    k2, v2 = np.asarray(k).copy(), np.asarray(v).copy()
+    for bi in range(b):
+        for li in range(m * psize):
+            if li > int(start[bi]) + w - 1:
+                k2[int(table[bi, li // psize]), li % psize] = 99.0
+                v2[int(table[bi, li // psize]), li % psize] = -99.0
+    got = ops.spec_verify(q, jnp.asarray(k2), jnp.asarray(v2), table,
+                          q_pos, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_spec_verify_single_lane_matches_paged_attention():
+    """A one-token window is exactly paged decode attention — the
+    verify kernel degenerates to the decode kernel it generalizes."""
+    from repro.kernels.paged_attention import paged_attention
+    from repro.kernels.spec_verify import spec_verify
+    rng = np.random.default_rng(10)
+    b, hq, hkv, d, psize, m = 3, 4, 2, 32, 8, 4
+    num_pages = b * m
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(num_pages, psize, hkv, d)),
+                    jnp.float32)
+    v = jnp.asarray(rng.normal(size=(num_pages, psize, hkv, d)),
+                    jnp.float32)
+    table = jnp.asarray(rng.permutation(num_pages).reshape(b, m),
+                        jnp.int32)
+    pos = jnp.asarray([3, 11, 25], jnp.int32)
+    got = spec_verify(q[:, None], k, v, table, pos[:, None],
+                      interpret=True)[:, 0]
+    want = paged_attention(q, k, v, table, pos, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
 def test_paged_attention_matches_contiguous_decode():
     """Gathering pages in table order reproduces contiguous-cache decode
     attention exactly — the numerical core of the paged engine's

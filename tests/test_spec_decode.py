@@ -1,0 +1,356 @@
+"""Speculative decoding on the paged engine: token-identity to every
+other engine (greedy AND seeded sampling), draft-window fork hygiene on
+the page pool, preempt/resume and emergency eviction mid-window, the
+separate-arch draft path, and the token streaming surface."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api.runner import build_model
+from repro.api.serving import (audit_stream, build_serve_context,
+                               build_workload, run_serve, verify_report)
+from repro.api.specs import (AdmissionSpec, CacheSpec, ClockSpec, DraftSpec,
+                             EngineSpec, ModelSpec, ReportSpec, SamplingSpec,
+                             SchedulerSpec, ServeSpec, SpecError, StreamSpec,
+                             TenantSpec, WorkloadSpec)
+from repro.runtime.paging import PagePool
+
+ARCH = "granite-3-2b"
+SAMP = SamplingSpec(method="sample", temperature=0.9, top_k=50, seed=7)
+# long generations relative to the prompt force post-admission page
+# growth, which is what drives the engine-level eviction valve
+GROW = WorkloadSpec(num_requests=8, prompt_lens=[5], max_new_tokens=[40])
+
+
+def _model(slot_len=64):
+    return build_model(ModelSpec(arch=ARCH, reduced=True),
+                       seq_len=slot_len)
+
+
+def _spec(engine="speculative", num_slots=4, slot_len=64, budget=4,
+          cache=None, sampling=None, workload=None, draft=None,
+          stream=None, report=None, **kw):
+    return ServeSpec(
+        model=ModelSpec(arch=ARCH, reduced=True),
+        engine=EngineSpec(name=engine, num_slots=num_slots,
+                          slot_len=slot_len),
+        admission=AdmissionSpec(token_budget=budget, **kw),
+        scheduler=SchedulerSpec(policy="fifo"),
+        workload=workload or WorkloadSpec(
+            num_requests=10, prompt_lens=[5, 9, 17, 33],
+            max_new_tokens=[4, 12, 20]),
+        clock=ClockSpec(kind="virtual"),
+        cache=cache or CacheSpec(page_size=16),
+        sampling=sampling or SamplingSpec(),
+        draft=draft or DraftSpec(num_layers=1, gamma=4),
+        stream=stream or StreamSpec(),
+        report=report or ReportSpec())
+
+
+def _serve(spec):
+    spec.validate()
+    ctx = build_serve_context(spec)
+    reqs = build_workload(spec, ctx.model.cfg.vocab_size)
+    report = ctx.engine.serve(reqs, spec)
+    return ctx, reqs, report
+
+
+def _tokens(report):
+    return {r["rid"]: r["tokens"] for r in report.per_request}
+
+
+# -------------------------------------------------- token identity
+
+class TestIdentity:
+    def test_greedy_identical_to_every_engine(self):
+        """Keyed-coupling acceptance makes speculative output the target's
+        output by construction — bit-identical to the paged and
+        continuous engines and to single-request decoding."""
+        _, _, cont = _serve(_spec(engine="continuous"))
+        _, _, paged = _serve(_spec(engine="paged"))
+        ctx, reqs, spec_r = _serve(_spec())
+        assert _tokens(spec_r) == _tokens(paged) == _tokens(cont)
+        verify_report(spec_r, ctx, requests=reqs)
+        ctx.engine.pool.check_no_leaks()
+        assert ctx.engine.pool.pages_in_use == 0
+
+    def test_sampled_identical_to_paged(self):
+        """The draft proposes with the target's own (seed, rid,
+        token_index) keys and emission always takes the verify step's
+        selections — so seeded sampling is identical too, not just
+        greedy."""
+        _, _, paged = _serve(_spec(engine="paged", sampling=SAMP))
+        ctx, _, spec_r = _serve(_spec(sampling=SAMP))
+        assert _tokens(spec_r) == _tokens(paged)
+        ctx.engine.pool.check_no_leaks()
+
+    def test_self_draft_full_acceptance(self):
+        """A draft with every target layer IS the target: each proposal
+        matches each verify selection, so every window accepts whole."""
+        depth = _model().cfg.num_layers
+        ctx, _, rep = _serve(_spec(draft=DraftSpec(num_layers=depth,
+                                                   gamma=3)))
+        s = rep.speculation
+        assert s["draft"] == f"layers:{depth}"
+        assert s["acceptance_rate"] == 1.0
+        assert s["proposed"] == s["accepted"] > 0
+        assert s["tokens_per_step"] > 1.0
+        ctx.engine.pool.check_no_leaks()
+
+    def test_speculation_report_counters(self):
+        _, _, rep = _serve(_spec())
+        s = rep.speculation
+        assert s["gamma"] == 4 and s["draft"] == "layers:1"
+        assert 0 <= s["accepted"] <= s["proposed"]
+        assert s["windows"] > 0 and s["acceptance_rate"] >= 0.0
+        assert rep.engine == "speculative"
+
+
+# ------------------------------------- preemption and eviction churn
+
+class TestChurn:
+    CH = CacheSpec(page_size=8, num_pages=12)
+
+    @pytest.mark.parametrize("sampling", [None, SAMP],
+                             ids=["greedy", "sampled"])
+    def test_eviction_mid_window_token_identical(self, sampling):
+        """A pool too small for the steady state forces emergency
+        evictions while draft windows are in flight: the fork rolls back
+        with the victim, the requeued request replays the same (seed,
+        rid, token_index) stream, and outputs stay identical."""
+        _, _, paged = _serve(_spec(engine="paged", workload=GROW,
+                                   sampling=sampling))
+        ctx, _, churn = _serve(_spec(workload=GROW, sampling=sampling,
+                                     cache=self.CH))
+        assert churn.preemptions > 0
+        assert _tokens(churn) == _tokens(paged)
+        ctx.engine.pool.check_no_leaks()
+        assert ctx.engine.pool.pages_in_use == 0
+
+    def test_tiny_pool_admits_instead_of_livelocking(self):
+        """A pool too small for the speculative growth reserve must
+        still make progress: an idle engine admits any fitting prompt
+        (the budgeter's reserve otherwise deadlocks admission — nobody
+        active, nobody ever admissible)."""
+        wl = WorkloadSpec(num_requests=4, prompt_lens=[6],
+                          max_new_tokens=[6])
+        _, _, paged = _serve(_spec(engine="paged", workload=wl,
+                                   num_slots=2, slot_len=12, budget=2,
+                                   cache=CacheSpec(page_size=16,
+                                                   num_pages=2)))
+        ctx, _, rep = _serve(_spec(workload=wl, num_slots=2, slot_len=12,
+                                   budget=2,
+                                   cache=CacheSpec(page_size=16,
+                                                   num_pages=2)))
+        assert _tokens(rep) == _tokens(paged)
+        ctx.engine.pool.check_no_leaks()
+
+    def test_tenant_preemption_no_page_leaks(self):
+        """Scheduler-driven tenant preemption cycles on the speculative
+        engine: a preempted row's live fork is rolled back automatically
+        and pages all come home."""
+        tenants = [TenantSpec(name="gold", share=3.0, priority=1),
+                   TenantSpec(name="bronze", share=1.0)]
+        wl = WorkloadSpec(num_requests=12, prompt_lens=[5, 9, 17],
+                          max_new_tokens=[6, 18],
+                          tenant_mix={"gold": 1.0, "bronze": 1.0})
+        kw = dict(policy="tenant", tenants=tenants, preempt=True)
+        _, _, cont = _serve(_spec(engine="continuous", workload=wl, **kw))
+        ctx, _, rep = _serve(_spec(workload=wl, **kw))
+        assert _tokens(rep) == _tokens(cont)
+        ctx.engine.pool.check_no_leaks()
+        assert ctx.engine.pool.pages_in_use == 0
+
+
+# ----------------------------------------------- separate-arch draft
+
+class TestSeparateArchDraft:
+    def test_arch_draft_token_identical(self):
+        """An independent draft model (own params, own page buffers)
+        still yields the target's exact tokens — bad proposals only cost
+        acceptance, never correctness."""
+        _, _, paged = _serve(_spec(engine="paged"))
+        ctx, _, rep = _serve(_spec(draft=DraftSpec(arch=ARCH, gamma=2,
+                                                   seed=3)))
+        assert _tokens(rep) == _tokens(paged)
+        assert rep.speculation["draft"] == f"arch:{ARCH}"
+        ctx.engine.pool.check_no_leaks()
+
+    def test_arch_draft_vocab_mismatch_rejected(self):
+        spec = _spec(draft=DraftSpec(arch="falcon-mamba-7b", gamma=2))
+        with pytest.raises((SpecError, ValueError, NotImplementedError)):
+            build_serve_context(spec)
+
+
+# --------------------------------------------------- token streaming
+
+class TestStreaming:
+    def test_stream_jsonl_and_audit(self, tmp_path):
+        """run_serve with streaming enabled: every emission lands in the
+        JSONL sink in order, and verify_report's stream audit confirms
+        stream order == final token order even with speculative bursts."""
+        path = tmp_path / "stream.jsonl"
+        spec = _spec(stream=StreamSpec(enabled=True, path=str(path)),
+                     report=ReportSpec(verify=-1))
+        report = run_serve(spec)
+        events = [json.loads(line) for line in
+                  path.read_text().splitlines()]
+        assert len(events) == sum(len(t) for t in
+                                  _tokens(report).values())
+        assert report.stream["events"] == len(events)
+        assert report.stream["mismatches"] == []
+        assert report.verified["stream"]["events"] == len(events)
+        # per-request contiguous indices, in emission order
+        seen: dict = {}
+        for ev in events:
+            assert ev["idx"] == seen.get(ev["rid"], 0)
+            seen[ev["rid"]] = ev["idx"] + 1
+
+    def test_audit_rejects_reordered_stream(self):
+        _, _, report = _serve(_spec(workload=WorkloadSpec(
+            num_requests=2, prompt_lens=[5], max_new_tokens=[4])))
+        good = [{"rid": rid, "idx": i, "tok": t, "t_s": 0.0}
+                for rid, toks in sorted(_tokens(report).items())
+                for i, t in enumerate(toks)]
+        assert audit_stream(report, good)["mismatches"] == []
+        with pytest.raises(RuntimeError, match="out of order"):
+            audit_stream(report, list(reversed(good)))
+        bad = [dict(ev) for ev in good]
+        bad[0]["tok"] += 1
+        with pytest.raises(RuntimeError, match="diverges"):
+            audit_stream(report, bad)
+
+    def test_engine_resets_hook_after_run(self):
+        spec = _spec(stream=StreamSpec(enabled=True))
+        ctx = build_serve_context(spec)
+        run_serve(spec, ctx=ctx)
+        assert ctx.engine.on_token is None
+
+
+# ------------------------------------------------- pool fork hygiene
+
+class TestForkHygiene:
+    def _pool(self, num_pages=12):
+        return PagePool(_model(), num_slots=2, slot_len=64, page_size=8,
+                        num_pages=num_pages)
+
+    def _grow(self, pool, slot, pos):
+        pool.pos[slot] = pos
+        assert pool.ensure_capacity(slot)
+
+    def test_fork_commit_transfers_accepted_prefix(self):
+        pool = self._pool()
+        slot = pool.alloc()
+        self._grow(pool, slot, 20)               # 3 committed pages
+        pool.fork_table(slot)
+        assert pool.forked_rows == 1 and pool.shared_pages == 3
+        assert pool.fork_extend(slot, 30) >= 30  # +1 fork-private page
+        row = pool.fork_row(slot)
+        assert len(row) == pool.max_pages_per_slot + 1
+        assert row[-1] == pool.scratch_page      # scratch lane pinned
+        pool.check_no_leaks()
+        pool.commit_fork(slot, 23)               # accept into page 2 only
+        assert pool.pos[slot] == 23
+        assert len(pool._tables[slot]) == 3      # private page went home
+        assert pool.forked_rows == 0
+        pool.check_no_leaks()
+        pool.release(slot)
+        pool.check_no_leaks()
+        assert pool.pages_in_use == 0
+
+    def test_fork_rollback_frees_only_private_tail(self):
+        pool = self._pool()
+        slot = pool.alloc()
+        self._grow(pool, slot, 10)               # 2 committed pages
+        free_before = pool.num_free_pages
+        pool.fork_table(slot)
+        pool.fork_extend(slot, 30)               # 2 private pages
+        assert pool.num_free_pages == free_before - 2
+        pool.release_fork(slot)
+        assert pool.num_free_pages == free_before
+        assert len(pool._tables[slot]) == 2      # committed pages intact
+        pool.check_no_leaks()
+        pool.release(slot)
+
+    def test_release_rolls_back_live_fork(self):
+        """Preempting a row mid-window must not leak its fork-private
+        pages — release() rolls the fork back first."""
+        pool = self._pool()
+        slot = pool.alloc()
+        self._grow(pool, slot, 10)
+        pool.fork_table(slot)
+        pool.fork_extend(slot, 30)
+        pool.release(slot)
+        assert pool.forked_rows == 0
+        assert pool.pages_in_use == 0
+        pool.check_no_leaks()
+
+    def test_fork_extend_shrinks_under_pressure(self):
+        """fork_extend never evicts: when the free list runs dry it
+        covers what it can and the engine shrinks the window."""
+        pool = self._pool(num_pages=4)
+        slot = pool.alloc()
+        self._grow(pool, slot, 20)               # 3 of 4 pages committed
+        pool.fork_table(slot)
+        assert pool.fork_extend(slot, 60) == 4 * 8 - 1
+        pool.release_fork(slot)
+        pool.release(slot)
+        pool.check_no_leaks()
+
+    def test_double_fork_rejected(self):
+        pool = self._pool()
+        slot = pool.alloc()
+        self._grow(pool, slot, 5)
+        pool.fork_table(slot)
+        with pytest.raises(RuntimeError, match="already has a live fork"):
+            pool.fork_table(slot)
+        pool.release_fork(slot)
+        pool.release(slot)
+
+    def test_rigged_refcount_mismatch_caught(self):
+        """check_no_leaks still catches corruption with forks live: a
+        shared page yanked from the main table breaks the refcount
+        prefix invariant."""
+        pool = self._pool()
+        slot = pool.alloc()
+        self._grow(pool, slot, 20)
+        pool.fork_table(slot)
+        pool._free_pages.append(pool._tables[slot].pop())
+        pool.page_release_count += 1
+        with pytest.raises(RuntimeError, match="refcount"):
+            pool.check_no_leaks()
+
+    def test_rigged_counter_imbalance_caught(self):
+        pool = self._pool()
+        slot = pool.alloc()
+        self._grow(pool, slot, 5)
+        pool.page_alloc_count += 1
+        with pytest.raises(RuntimeError, match="counters out of balance"):
+            pool.check_no_leaks()
+
+
+# --------------------------------------------------- spec validation
+
+class TestSpecValidation:
+    def test_speculative_needs_a_draft_source(self):
+        with pytest.raises(SpecError, match="draft source"):
+            _spec(draft=DraftSpec()).validate()
+
+    def test_draft_sources_exclusive(self):
+        with pytest.raises(SpecError, match="exclusive"):
+            _spec(draft=DraftSpec(arch=ARCH, num_layers=1)).validate()
+
+    def test_gamma_must_be_positive(self):
+        with pytest.raises(SpecError, match="gamma"):
+            _spec(draft=DraftSpec(num_layers=1, gamma=0)).validate()
+
+    def test_stream_path_needs_enabled(self):
+        with pytest.raises(SpecError, match="stream.enabled"):
+            _spec(stream=StreamSpec(path="x.jsonl")).validate()
+
+    def test_draft_spec_roundtrips_through_json(self):
+        spec = _spec(draft=DraftSpec(num_layers=1, gamma=3),
+                     stream=StreamSpec(enabled=True))
+        again = ServeSpec.from_json(spec.to_json())
+        assert again.draft == spec.draft and again.stream == spec.stream

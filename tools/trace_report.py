@@ -13,6 +13,9 @@ structured JSONL):
   enqueue/prefill/decode durations and end-to-end request latency,
   reconstructed from the async begin/end pairs;
 * **counter** ranges (active_slots, queued);
+* **speculative draft windows** (speculative-engine ``spec_window``
+  records) — per-request accepted/rejected proposal totals and the
+  overall acceptance rate;
 * the **GPSL monitor verdict** (JSONL only — monitor records never enter
   the Chrome timeline): per-epoch violation counts and the worst step's
   class deviation vs the Serfling radius.
@@ -93,6 +96,7 @@ def summarize(rows: List[Dict[str, Any]]) -> Dict[str, Any]:
     lifecycle: Dict[str, List[float]] = defaultdict(list)
     monitor_steps: List[Dict[str, Any]] = []
     monitor_summaries: List[Dict[str, Any]] = []
+    spec_windows: List[Dict[str, Any]] = []
     for r in rows:
         k = r.get("kind")
         if k == "meta":
@@ -112,6 +116,8 @@ def summarize(rows: List[Dict[str, Any]]) -> Dict[str, Any]:
             monitor_steps.append(r)
         elif k == "monitor_summary":
             monitor_summaries.append(r)
+        elif k == "spec_window":
+            spec_windows.append(r)
     out: Dict[str, Any] = {"meta": meta}
     out["phases"] = {
         name: {"count": len(ds), "total_s": sum(ds),
@@ -126,6 +132,28 @@ def summarize(rows: List[Dict[str, Any]]) -> Dict[str, Any]:
             name: {"samples": len(vs), "min": min(vs), "max": max(vs),
                    "last": vs[-1]}
             for name, vs in sorted(counters.items())}
+    if spec_windows:
+        # per-request accepted/rejected draft spans (speculative engine
+        # spec_window records — JSONL only, like the monitor records)
+        per_rid: Dict[Any, Dict[str, int]] = {}
+        for w in spec_windows:
+            row = per_rid.setdefault(
+                w.get("rid"), {"windows": 0, "proposed": 0, "accepted": 0})
+            row["windows"] += 1
+            row["proposed"] += int(w.get("proposed", 0))
+            row["accepted"] += int(w.get("accepted", 0))
+        proposed = sum(r["proposed"] for r in per_rid.values())
+        accepted = sum(r["accepted"] for r in per_rid.values())
+        out["speculation"] = {
+            "windows": len(spec_windows),
+            "proposed": proposed, "accepted": accepted,
+            "rejected": proposed - accepted,
+            "acceptance_rate": accepted / proposed if proposed else 0.0,
+            "per_request": {
+                str(rid): dict(
+                    row, acceptance_rate=(row["accepted"] / row["proposed"]
+                                          if row["proposed"] else 0.0))
+                for rid, row in sorted(per_rid.items())}}
     if monitor_summaries or monitor_steps:
         viols = [m for m in monitor_steps
                  if not (m.get("deviation_ok", True)
@@ -170,6 +198,20 @@ def render(doc: Dict[str, Any]) -> str:
         for name, c in doc["counters"].items():
             lines.append(f"counter {name}: min={c['min']:g} max={c['max']:g}"
                          f" last={c['last']:g} ({c['samples']} samples)")
+    if doc.get("speculation"):
+        sp = doc["speculation"]
+        lines.append("")
+        lines.append(
+            f"speculative draft windows: {sp['windows']} "
+            f"(proposed {sp['proposed']}, accepted {sp['accepted']}, "
+            f"rejected {sp['rejected']}, "
+            f"acceptance {sp['acceptance_rate']:.3f})")
+        lines.append(f"{'rid':>6} {'windows':>8} {'proposed':>9} "
+                     f"{'accepted':>9} {'accept%':>8}")
+        for rid, row in sp["per_request"].items():
+            lines.append(f"{rid:>6} {row['windows']:>8} "
+                         f"{row['proposed']:>9} {row['accepted']:>9} "
+                         f"{100.0 * row['acceptance_rate']:>7.1f}%")
     if "monitor" in doc:
         mon = doc["monitor"]
         lines.append("")
